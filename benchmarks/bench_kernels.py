@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU / native on TPU) vs the
+pure-jnp oracle, per shape."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks import common
+
+
+def main() -> dict:
+    out = {}
+    x = common.field_slices_cached("miranda-vx", 1, 384)[0]
+    eps = 1e-3 * float(jnp.max(x) - jnp.min(x))
+
+    from repro.kernels.gram import ops as gops, ref as gref
+    t_k = common.timeit(lambda: gops.gram(x), warmup=1, iters=2)
+    t_r = common.timeit(lambda: gref.gram_xtx(x), warmup=1, iters=2)
+    common.emit("kernels/gram_384", t_k, f"ref_us={t_r:.0f}")
+    out["gram"] = {"kernel_us": t_k, "ref_us": t_r}
+
+    from repro.kernels.qent import ops as qops, ref as qref
+    t_k = common.timeit(lambda: qops.quantized_entropy(x, eps), warmup=1, iters=2)
+    t_r = common.timeit(lambda: qref.quantized_entropy(x, eps), warmup=1, iters=2)
+    common.emit("kernels/qent_384", t_k, f"ref_us={t_r:.0f}")
+    out["qent"] = {"kernel_us": t_k, "ref_us": t_r}
+
+    from repro.kernels.lorenzo import ops as lops, ref as lref
+    t_k = common.timeit(lambda: lops.lorenzo2d(x, eps), warmup=1, iters=2)
+    t_r = common.timeit(lambda: lref.lorenzo2d(x, eps), warmup=1, iters=2)
+    common.emit("kernels/lorenzo_384", t_k, f"ref_us={t_r:.0f}")
+    out["lorenzo"] = {"kernel_us": t_k, "ref_us": t_r}
+
+    from repro.kernels.zfp_block import ops as zops, ref as zref
+    t_k = common.timeit(lambda: zops.zfp_forward2d(x)[0], warmup=1, iters=2)
+    t_r = common.timeit(lambda: zref.zfp_forward2d(x)[0], warmup=1, iters=2)
+    common.emit("kernels/zfp_block_384", t_k, f"ref_us={t_r:.0f}")
+    out["zfp_block"] = {"kernel_us": t_k, "ref_us": t_r}
+
+    common.save_json("kernels", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

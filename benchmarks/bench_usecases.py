@@ -1,0 +1,91 @@
+"""Fig 10 / section 5: wall-clock for UC1 (target-CR search) and UC2
+(best-compressor selection): statistical model vs running real compressors.
+
+The paper uses SCALE-LetKF V (largest buffers) as the worst case for the
+SVD; we use the largest slice our CPU budget allows and report per-stage
+times exactly as Fig 10 does (svd / qent / inference / compressor runs)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro import compressors as C
+from repro.core import pipeline as PL, predictors as P, usecases as UC
+
+FIELD, COUNT, N = "scale-u", 14, 256
+UC2_COMPRESSORS = ["sz2", "sz3-lorenzo", "sz3-interp", "zfp", "mgard",
+                   "bitgrooming", "digitrounding"]
+
+
+def main() -> dict:
+    slices = common.field_slices_cached(FIELD, COUNT, N)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    ebs = [1e-5 * rng, 1e-4 * rng, 1e-3 * rng, 1e-2 * rng]
+    test = slices[-1]
+    out = {}
+
+    # ---------------- stage timings (Fig 10 cost structure) ---------------
+    t_svd = common.timeit(lambda: P.svd_trunc(test), warmup=1, iters=3)
+    t_qent = common.timeit(lambda: P.quantized_entropy(test, ebs[2]),
+                           warmup=1, iters=3)
+    t_comp = {c: common.timeit(lambda c=c: C.get(c).cr(test, ebs[2]),
+                               warmup=0, iters=1) for c in UC2_COMPRESSORS}
+    common.emit("fig10/stages", t_svd,
+                f"svd_us={t_svd:.0f} qent_us={t_qent:.0f} "
+                + " ".join(f"{k}_us={v:.0f}" for k, v in t_comp.items()))
+
+    # ---------------- UC1: find eb achieving target CR --------------------
+    gm = UC.EbGridModel.train(slices[:10], "sz2", ebs)   # warm start
+    # deploy-time (warm) regime: jit caches already populated
+    UC.find_error_bound_for_cr(gm, slices[0], target_cr=8.0)
+    # model path: SVD once + qent/inference per probe
+    t0 = time.perf_counter()
+    eps_m, cr_m = UC.find_error_bound_for_cr(gm, test, target_cr=8.0)
+    t_model = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    eps_x, cr_x, runs = UC.find_error_bound_exhaustive(
+        "sz2", test, 8.0, ebs[0], ebs[-1])
+    t_exh = time.perf_counter() - t0
+    true_m = C.get("sz2").cr(test, eps_m)
+    out["uc1"] = {"model_s": t_model, "exhaustive_s": t_exh,
+                  "speedup": t_exh / max(t_model, 1e-9),
+                  "compressor_runs_saved": runs,
+                  "achieved_cr": true_m, "target": 8.0}
+    common.emit("fig10/uc1", t_model * 1e6,
+                f"speedup={t_exh / max(t_model, 1e-9):.1f}x "
+                f"runs_saved={runs} achieved_cr={true_m:.2f} target=8.0")
+
+    # ---------------- UC2: best compressor at fixed eb --------------------
+    eps = ebs[2]
+    models = {}
+    for name in UC2_COMPRESSORS:
+        crs = jnp.asarray([common.cr_cached(name, FIELD, COUNT, N, eps, i)
+                           for i in range(10)])
+        models[name] = PL.CRPredictor.train(slices[:10], crs, eps)
+    # warm: featurize once, eval every model
+    UC.best_compressor(models, slices[0], eps)       # warm jit
+    t0 = time.perf_counter()
+    best_pred, preds = UC.best_compressor(models, test, eps)
+    t_model2 = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    best_true, crs_true = UC.best_compressor_exhaustive(
+        UC2_COMPRESSORS, test, eps)
+    t_exh2 = time.perf_counter() - t0
+    ok = crs_true[best_pred] >= 0.9 * crs_true[best_true]
+    out["uc2"] = {"model_s": t_model2, "exhaustive_s": t_exh2,
+                  "speedup": t_exh2 / max(t_model2, 1e-9),
+                  "pred_best": best_pred, "true_best": best_true,
+                  "within_10pct": bool(ok)}
+    common.emit("fig10/uc2", t_model2 * 1e6,
+                f"speedup={t_exh2 / max(t_model2, 1e-9):.1f}x "
+                f"pred_best={best_pred} true_best={best_true} good={ok}")
+    common.save_json("fig10_usecases", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Shared benchmark utilities: timing, CSV emission, cached field data."""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS_DIR, exist_ok=True)
+
+_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def rows():
+    return list(_ROWS)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (post-warmup)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+            isinstance(r, jax.Array) else None
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if isinstance(r, jax.Array):
+            r.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+@functools.lru_cache(maxsize=32)
+def field_slices_cached(name: str, count: int, n: int):
+    from repro.data import scientific
+    return scientific.field_slices(name, count=count, n=n)
+
+
+@functools.lru_cache(maxsize=8)
+def gaussian_cached(sample_type: int, count: int, n: int):
+    from repro.data import gaussian
+    return gaussian.sample_batch(sample_type, count=count, n=n)
+
+
+@functools.lru_cache(maxsize=512)
+def cr_cached(comp: str, field: str, count: int, n: int, eps: float,
+              idx: int) -> float:
+    from repro import compressors as C
+    s = field_slices_cached(field, count, n)[idx]
+    return C.get(comp).cr(s, eps)
+
+
+def crs_for(comp: str, field: str, count: int, n: int, eps: float):
+    return np.asarray([cr_cached(comp, field, count, n, eps, i)
+                       for i in range(count)])
+
+
+def save_json(name: str, obj):
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)

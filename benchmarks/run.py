@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+
+  python -m benchmarks.run            # everything
+  python -m benchmarks.run fig5 uc    # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("table2_fig2_prediction", "benchmarks.bench_prediction"),
+    ("fig4_predictors", "benchmarks.bench_predictors"),
+    ("fig5_gaussian", "benchmarks.bench_gaussian"),
+    ("fig6_sz_schemes", "benchmarks.bench_sz_schemes"),
+    ("table3_fig8_lasso", "benchmarks.bench_lasso"),
+    ("table4_fig9_3d", "benchmarks.bench_3d"),
+    ("table5_prior", "benchmarks.bench_prior"),
+    ("fig10_usecases", "benchmarks.bench_usecases"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    failures = []
+    for name, module in SUITES:
+        if filters and not any(f in name for f in filters):
+            continue
+        print(f"# ==== {name} ({module}) ====", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+        print(f"# ---- {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

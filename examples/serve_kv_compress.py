@@ -1,0 +1,37 @@
+"""Batched serving with q-ent-gated KV-cache compression.
+
+The engine scores decode-time KV blocks with the paper's in-graph
+quantized-entropy size model and int8-quantizes the ones predicted to
+compress well -- UC2 at serving time.
+
+    PYTHONPATH=src python examples/serve_kv_compress.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke
+from repro.serve.engine import Engine, ServeConfig
+from repro.train import train_step as TS
+
+
+def main():
+    cfg = get_smoke("granite-3-2b")
+    params = TS.init_state(cfg, jax.random.PRNGKey(0)).params
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab_size, dtype=jnp.int32)}
+
+    plain = Engine(cfg, params, ServeConfig(max_len=128))
+    comp = Engine(cfg, params, ServeConfig(max_len=128, kv_compress=True,
+                                           kv_gate_ratio=1.5))
+    out_plain = plain.generate(batch, steps=16)
+    out_comp = comp.generate(batch, steps=16)
+    agree = float(jnp.mean((out_plain == out_comp).astype(jnp.float32)))
+    print(f"tokens generated: {out_comp.shape}")
+    print(f"greedy agreement with uncompressed KV: {agree * 100:.1f}%")
+    print(f"KV bytes metered: {comp.kv_total_bytes:,} "
+          f"saved by int8 gate: {comp.kv_saved_bytes:,} "
+          f"({100 * comp.kv_saved_bytes / max(comp.kv_total_bytes, 1):.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Error-bounded lossy compressor suite (JAX decorrelation + real byte counts).
+
+Importing this package registers all compressors:
+  sz2, sz3-lorenzo, sz3-regression, sz3-interp, zfp, mgard,
+  bitgrooming, digitrounding, tthresh.
+"""
+from repro.compressors import base
+from repro.compressors import sz        # noqa: F401  (registers)
+from repro.compressors import zfp      # noqa: F401
+from repro.compressors import mgard    # noqa: F401
+from repro.compressors import rounding # noqa: F401
+from repro.compressors import tthresh  # noqa: F401
+
+get = base.get
+names = base.names
+all_compressors = base.all_compressors
+
+# The 2-D study set used across benchmarks (paper's main compressor list).
+STUDY_2D = ["sz2", "sz3-lorenzo", "sz3-regression", "sz3-interp",
+            "zfp", "mgard", "bitgrooming", "digitrounding"]
+# The 3-D study set (paper section 4.5).
+STUDY_3D = ["sz2", "zfp", "mgard", "bitgrooming", "tthresh"]

@@ -1,0 +1,100 @@
+"""MGARD-like multilevel (multigrid) compressor.
+
+Hierarchical decomposition (Ainsworth et al.): the data is recursively
+restricted to a coarse grid; fine-grid points are predicted by multilinear
+interpolation of the *reconstructed* coarse grid and the multilevel
+coefficients (prediction residuals) are uniformly quantized and entropy
+coded (zstd).  Predicting from reconstructed values keeps the absolute
+error bound exact at every point, mirroring MGARD's s=0 uniform-quantizer
+mode.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.compressors import base, lossless
+from repro.compressors.sz import quantize_bounded
+
+
+def _interp_even_to_full(coarse: jnp.ndarray, full_shape, axis: int) -> jnp.ndarray:
+    """Linear interpolation from even-index samples to the full grid along
+    ``axis`` (odd points = average of neighbours, edge clamped)."""
+    c = jnp.moveaxis(coarse, axis, 0)
+    n_full = full_shape[axis]
+    nxt = jnp.concatenate([c[1:], c[-1:]], axis=0)
+    odd = 0.5 * (c + nxt)
+    out_shape = (n_full,) + c.shape[1:]
+    out = jnp.zeros(out_shape, c.dtype)
+    out = out.at[0::2].set(c[: (n_full + 1) // 2])
+    out = out.at[1::2].set(odd[: n_full // 2])
+    return jnp.moveaxis(out, 0, axis)
+
+
+def _predict_fine(coarse: jnp.ndarray, fine_shape) -> jnp.ndarray:
+    """Multilinear prolongation from the [::2,::2(,::2)] grid to fine_shape."""
+    cur = coarse
+    for axis in range(len(fine_shape)):
+        cur = _interp_even_to_full(cur, fine_shape, axis)
+    return cur
+
+
+def _restrict(data: jnp.ndarray) -> jnp.ndarray:
+    sl = tuple(slice(None, None, 2) for _ in data.shape)
+    return data[sl]
+
+
+class MGARD(base.Compressor):
+    name = "mgard"
+    levels = 4
+
+    def encode(self, data, eps):
+        data = data.astype(jnp.float32)
+        shapes, codes = [], []
+        cur = data
+        for _ in range(self.levels):
+            if min(cur.shape) < 4:
+                break
+            coarse = _restrict(cur)
+            shapes.append(cur.shape)
+            codes.append(None)  # placeholder, filled in reverse pass
+            cur = coarse
+        # Quantize from the coarsest level outward so predictions use
+        # reconstructed values (exact error-bound preservation).
+        root_codes = quantize_bounded(cur, eps)
+        recon = root_codes.astype(jnp.float32) * (2.0 * eps)
+        level_codes = []
+        # We must re-derive each level's fine data: walk shapes in reverse.
+        fines = []
+        cur2 = data
+        for shape in shapes:
+            fines.append(cur2)
+            cur2 = _restrict(cur2)
+        for fine, shape in zip(reversed(fines), reversed(shapes)):
+            pred = _predict_fine(recon, shape)
+            resid = fine - pred
+            c = quantize_bounded(resid, eps)
+            level_codes.append(c)
+            recon = pred + c.astype(jnp.float32) * (2.0 * eps)
+        return (root_codes, level_codes), {"shape": data.shape, "shapes": shapes}
+
+    def decode(self, codes, aux, eps):
+        root_codes, level_codes = codes
+        recon = root_codes.astype(jnp.float32) * (2.0 * eps)
+        for c, shape in zip(level_codes, reversed(aux["shapes"])):
+            pred = _predict_fine(recon, shape)
+            recon = pred + c.astype(jnp.float32) * (2.0 * eps)
+        return recon
+
+    def size_bytes(self, codes, aux, eps):
+        root_codes, level_codes = codes
+        total = lossless.coded_size_bytes(np.asarray(root_codes))
+        for c in level_codes:
+            total += lossless.coded_size_bytes(np.asarray(c))
+        return total
+
+
+base.register(MGARD())

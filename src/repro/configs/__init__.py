@@ -1,0 +1,3 @@
+"""Architecture configs (one per assigned arch) + shape cells."""
+from repro.configs.base import (ModelConfig, ShapeConfig, SHAPES,
+                                ARCH_IDS, get_arch, get_smoke)

@@ -1,0 +1,9 @@
+"""Paper core: compressor-agnostic CR predictors + statistical models.
+
+Public API:
+    predictors.features_2d / features_3d / svd_trunc / quantized_entropy
+    regression.LinearCRModel / SplineCRModel / lasso_importance
+    pipeline.CRPredictor / kfold_evaluate
+    usecases.EbGridModel / find_error_bound_for_cr / best_compressor
+"""
+from repro.core import predictors, regression, pipeline, usecases  # noqa: F401

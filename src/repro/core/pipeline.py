@@ -1,0 +1,130 @@
+"""Two-step CR-prediction pipeline + evaluation (paper sections 3.2-3.3).
+
+Step (1): compressor-agnostic predictors per slice (repro.core.predictors).
+Step (2): per-(compressor, field) regression trained on observed CRs.
+
+Evaluation follows Algorithm 1: k-fold cross-validation, out-of-sample
+median absolute percentage error (MedAPE) with 10%/90% quantiles, and the
+linear correlation between true and predicted CRs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import predictors as P
+from repro.core import regression as R
+
+
+@dataclasses.dataclass
+class EvalResult:
+    medape: float            # median over folds of per-fold median APE (%)
+    medape_q10: float
+    medape_q90: float
+    correlation: float       # pooled over all out-of-sample predictions
+    true_cr: np.ndarray
+    pred_cr: np.ndarray
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"EvalResult(medape={self.medape:.2f}% "
+                f"[{self.medape_q10:.2f},{self.medape_q90:.2f}], "
+                f"corr={self.correlation:.3f}, n={len(self.true_cr)})")
+
+
+def ape(true: np.ndarray, pred: np.ndarray) -> np.ndarray:
+    return 100.0 * np.abs(true - pred) / np.abs(true)
+
+
+def featurize_slices(
+    slices: jnp.ndarray,
+    eps: float,
+    cfg: P.PredictorConfig = P.PredictorConfig(),
+) -> jnp.ndarray:
+    """(k, m, n) stack of 2-D slices -> (k, 2) predictor matrix."""
+    return P.features_batch(slices, eps, cfg)
+
+
+def kfold_evaluate(
+    features: np.ndarray,
+    cr: np.ndarray,
+    model: str = "spline",
+    k: int = 8,
+    seed: int = 0,
+) -> EvalResult:
+    """Algorithm 1: k-fold CV of the CR regression; returns MedAPE stats."""
+    features = np.asarray(features, np.float64)
+    cr = np.asarray(cr, np.float64)
+    n = len(cr)
+    k = min(k, n)  # never more folds than points
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    folds = np.array_split(perm, k)
+    fit = R.MODEL_REGISTRY[model]
+
+    fold_medape, all_true, all_pred = [], [], []
+    for f in folds:
+        test_mask = np.zeros(n, bool)
+        test_mask[f] = True
+        x_tr, y_tr = features[~test_mask], cr[~test_mask]
+        x_te, y_te = features[test_mask], cr[test_mask]
+        m = fit(jnp.asarray(x_tr), jnp.asarray(y_tr))
+        pred = np.asarray(m.predict(jnp.asarray(x_te)))
+        fold_medape.append(float(np.median(ape(y_te, pred))))
+        all_true.append(y_te)
+        all_pred.append(pred)
+
+    true = np.concatenate(all_true)
+    pred = np.concatenate(all_pred)
+    corr = float(np.corrcoef(true, pred)[0, 1]) if len(true) > 1 else 1.0
+    med = np.asarray(fold_medape)
+    return EvalResult(
+        medape=float(np.quantile(med, 0.5)),
+        medape_q10=float(np.quantile(med, 0.1)),
+        medape_q90=float(np.quantile(med, 0.9)),
+        correlation=corr,
+        true_cr=true,
+        pred_cr=pred,
+    )
+
+
+@dataclasses.dataclass
+class CRPredictor:
+    """A trained (compressor, field, error-bound) CR predictor.
+
+    This is the deployable object used by the framework services
+    (checkpointing, gradient compression, KV-cache gating).
+    """
+    model: object
+    eps: float
+    cfg: P.PredictorConfig = dataclasses.field(default_factory=P.PredictorConfig)
+    ndim: int = 2
+
+    @staticmethod
+    def train(
+        slices: jnp.ndarray,
+        cr: jnp.ndarray,
+        eps: float,
+        model: str = "spline",
+        cfg: P.PredictorConfig = P.PredictorConfig(),
+        ndim: int = 2,
+    ) -> "CRPredictor":
+        if ndim == 2:
+            feats = featurize_slices(slices, eps, cfg)
+        else:
+            feats = jnp.stack([P.features_3d(s, eps, cfg) for s in slices])
+        m = R.MODEL_REGISTRY[model](feats, jnp.asarray(cr))
+        return CRPredictor(m, eps, cfg, ndim)
+
+    def predict_from_features(self, feats: jnp.ndarray) -> jnp.ndarray:
+        return self.model.predict(feats)
+
+    def predict(self, slices: jnp.ndarray) -> jnp.ndarray:
+        if self.ndim == 2:
+            feats = featurize_slices(slices, self.eps, self.cfg)
+        else:
+            feats = jnp.stack([P.features_3d(s, self.eps, self.cfg) for s in slices])
+        return self.model.predict(feats)

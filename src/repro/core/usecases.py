@@ -1,0 +1,180 @@
+"""The paper's two production use cases (sections 1 and 5).
+
+UC1 -- fixed-ratio configuration: find the error bound at which a compressor
+       achieves a target CR.  OptZConfig-style iterative search, but each
+       probe evaluates the *statistical model* instead of running the
+       compressor (the paper's >= 8.8x speedup).
+UC2 -- best-compressor selection: rank a set of compressors by predicted CR
+       at a fixed error bound without running any of them (>= 7.8x speedup).
+
+Cross-error-bound modelling follows section 4.4: per-eb regressions are fit
+on a small grid of error bounds and model predictions are interpolated in
+log(eps) (the paper observes coefficients vary smoothly/low-order in eb).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import pipeline as PL
+from repro.core import predictors as P
+from repro import compressors as C
+
+
+@dataclasses.dataclass
+class EbGridModel:
+    """CR predictor across error bounds: one model per grid eb +
+    log-linear interpolation of log(CR) between neighbouring grid points."""
+    ebs: np.ndarray                       # ascending error-bound grid
+    models: list                          # CRPredictor per eb
+    name: str = ""
+
+    @staticmethod
+    def train(
+        slices: jnp.ndarray,
+        compressor: str,
+        ebs: Sequence[float],
+        model: str = "spline",
+    ) -> "EbGridModel":
+        comp = C.get(compressor)
+        models = []
+        for eps in ebs:
+            crs = jnp.asarray([comp.cr(s, float(eps)) for s in slices])
+            models.append(PL.CRPredictor.train(slices, crs, float(eps), model))
+        return EbGridModel(np.asarray(ebs, np.float64), models, compressor)
+
+    def predict(self, data: jnp.ndarray, eps: float,
+                feat_cache=None) -> float:
+        """Predicted CR for one slice at an arbitrary eb (log-interp).
+
+        ``feat_cache``: the closure from ``predictors.features_2d_cached``;
+        reuses the eps-independent SVD/sigma across the whole sweep (the
+        paper's UC1 cost structure)."""
+        if feat_cache is None:
+            feat_cache = P.features_2d_cached(data)
+        le = np.log(eps)
+        lg = np.log(self.ebs)
+        if le <= lg[0]:
+            i0, i1, t = 0, 0, 0.0
+        elif le >= lg[-1]:
+            i0, i1, t = len(lg) - 1, len(lg) - 1, 0.0
+        else:
+            i1 = int(np.searchsorted(lg, le))
+            i0 = i1 - 1
+            t = (le - lg[i0]) / (lg[i1] - lg[i0])
+        # q-ent is eb-dependent -> evaluate features at the grid ebs
+        from repro.core.regression import predict_fast
+        f0 = feat_cache(self.ebs[i0])[None]
+        c0 = float(predict_fast(self.models[i0].model, f0)[0])
+        if i1 == i0:
+            return c0
+        f1 = feat_cache(self.ebs[i1])[None]
+        c1 = float(predict_fast(self.models[i1].model, f1)[0])
+        return float(np.exp((1 - t) * np.log(c0) + t * np.log(c1)))
+
+
+def find_error_bound_for_cr(
+    grid_model: EbGridModel,
+    data: jnp.ndarray,
+    target_cr: float,
+    tol: float = 0.02,
+    max_iters: int = 32,
+) -> tuple[float, float]:
+    """UC1: bisection on log(eps) using the statistical model only.
+
+    Returns (eps, predicted_cr).  CR(eps) is monotone nondecreasing, so
+    bisection converges; the model evaluation replaces compressor runs.
+    """
+    from repro.core import predictors as _P
+    raw_cache = _P.features_2d_cached(data)
+    memo: dict = {}
+
+    def feat_cache(eps):
+        # bisection only ever evaluates features at the model-grid ebs, so
+        # q-ent runs at most len(ebs) times for the whole search
+        k = float(eps)
+        if k not in memo:
+            memo[k] = raw_cache(eps)
+        return memo[k]
+
+    lo, hi = float(grid_model.ebs[0]), float(grid_model.ebs[-1])
+    cr_lo = grid_model.predict(data, lo, feat_cache)
+    cr_hi = grid_model.predict(data, hi, feat_cache)
+    if target_cr <= cr_lo:
+        return lo, cr_lo
+    if target_cr >= cr_hi:
+        return hi, cr_hi
+    for _ in range(max_iters):
+        mid = float(np.exp(0.5 * (np.log(lo) + np.log(hi))))
+        cr_mid = grid_model.predict(data, mid, feat_cache)
+        if abs(cr_mid - target_cr) / target_cr < tol:
+            return mid, cr_mid
+        if cr_mid < target_cr:
+            lo = mid
+        else:
+            hi = mid
+    return mid, cr_mid
+
+
+def find_error_bound_exhaustive(
+    compressor: str,
+    data: jnp.ndarray,
+    target_cr: float,
+    lo: float,
+    hi: float,
+    tol: float = 0.02,
+    max_iters: int = 32,
+) -> tuple[float, float, int]:
+    """UC1 baseline: same bisection but *running the compressor* per probe
+    (what OptZConfig does).  Returns (eps, cr, num_compressor_runs)."""
+    comp = C.get(compressor)
+    runs = 0
+    cr_lo = comp.cr(data, lo); runs += 1
+    cr_hi = comp.cr(data, hi); runs += 1
+    if target_cr <= cr_lo:
+        return lo, cr_lo, runs
+    if target_cr >= cr_hi:
+        return hi, cr_hi, runs
+    mid, cr_mid = hi, cr_hi
+    for _ in range(max_iters):
+        mid = float(np.exp(0.5 * (np.log(lo) + np.log(hi))))
+        cr_mid = comp.cr(data, mid); runs += 1
+        if abs(cr_mid - target_cr) / target_cr < tol:
+            break
+        if cr_mid < target_cr:
+            lo = mid
+        else:
+            hi = mid
+    return mid, cr_mid, runs
+
+
+def best_compressor(
+    models: Dict[str, object],
+    data: jnp.ndarray,
+    eps: float,
+) -> tuple[str, Dict[str, float]]:
+    """UC2: rank compressors by predicted CR; no compressor executions.
+
+    ``models``: name -> trained CRPredictor at this eps.  The expensive
+    featurization (SVD + q-ent) is shared across compressors -- computed
+    once, fed to every model (the paper's key UC2 cost structure).
+    """
+    from repro.core.regression import predict_fast
+    feats = P.features_2d_cached(data)(eps)[None]
+    preds = {name: float(predict_fast(m.model, feats)[0])
+             for name, m in models.items()}
+    return max(preds, key=preds.get), preds
+
+
+def best_compressor_exhaustive(
+    names: Sequence[str],
+    data: jnp.ndarray,
+    eps: float,
+) -> tuple[str, Dict[str, float]]:
+    """UC2 baseline: run every compressor (Tao et al. 2019b procedure)."""
+    crs = {n: C.get(n).cr(data, eps) for n in names}
+    return max(crs, key=crs.get), crs

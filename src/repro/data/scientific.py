@@ -1,0 +1,158 @@
+"""Synthetic stand-ins for the paper's six scientific datasets.
+
+The container is offline, so SDRBench itself is unavailable; each generator
+mimics the qualitative structure the paper relies on (spatial correlation
+profile, heterogeneity, value range) so that every table/figure has a
+corresponding bench row.  Slices vary smoothly along the slicing axis, so a
+*field* yields a stack of correlated-but-distinct 2-D slices -- exactly the
+training population the paper's per-field regressions use.
+
+Dimensions follow Table 1 (reduced by default for CI speed; full sizes via
+``full_size=True``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+import zlib
+
+from repro.data import gaussian
+
+
+def _fbm_spectrum_field(key, n: int, slope: float, seed_phase: float = 0.0):
+    """Power-law (turbulence-like) random field: |k|^-slope spectrum."""
+    freq = jnp.fft.fftfreq(n) * n
+    k2 = freq[:, None] ** 2 + freq[None, :] ** 2
+    spec = jnp.where(k2 > 0, k2 ** (-slope / 2.0), 0.0)
+    kr, ki = jax.random.split(key)
+    noise = jax.random.normal(kr, (n, n)) + 1j * jax.random.normal(ki, (n, n))
+    f = jnp.fft.ifft2(noise * jnp.sqrt(spec)).real
+    return f / jnp.maximum(jnp.std(f), 1e-9)
+
+
+def miranda_like(key, n: int = 384, z: float = 0.0) -> jnp.ndarray:
+    """Multicomponent-flow density: smooth turbulence + sharp material
+    interface (tanh front) whose position drifts with slice index z."""
+    k1, k2 = jax.random.split(key)
+    # complexity sweeps along the slicing axis: smooth laminar slices at one
+    # end, fine-grained turbulent mixing at the other (wide CR range, as the
+    # real Miranda z-stack exhibits).
+    mix = 0.5 - 0.5 * jnp.cos(z)            # 0 .. 1
+    slope = 4.0 - 1.8 * mix                  # smooth -> rough spectrum
+    turb = _fbm_spectrum_field(k1, n, slope=slope)
+    ii = jnp.linspace(-1, 1, n)
+    front = jnp.tanh((ii[:, None] - 0.3 * jnp.sin(3 * z) +
+                      (0.05 + 0.4 * mix) * turb) * (2.0 + 12.0 * mix))
+    return (1.5 + 0.5 * front + (0.05 + 0.45 * mix) * turb).astype(jnp.float32)
+
+
+def cesm_cloud_like(key, n: int = 512, z: float = 0.0) -> jnp.ndarray:
+    """Cloud fraction: intermittent [0,1] field with large clear patches."""
+    k1, _ = jax.random.split(key)
+    mix = 0.5 - 0.5 * jnp.cos(z)
+    base = _fbm_spectrum_field(k1, n, slope=3.4 - 1.6 * mix)
+    sharp = 2.0 + 10.0 * mix
+    cloud = jax.nn.sigmoid((base - 0.4 + 0.3 * jnp.cos(2 * z)) * sharp)
+    return jnp.clip(cloud, 0.0, 1.0).astype(jnp.float32)
+
+
+def hurricane_like(key, n: int = 500, z: float = 0.0) -> jnp.ndarray:
+    """East-west wind with a vortex: solid-body core + 1/r tail + noise."""
+    k1, _ = jax.random.split(key)
+    ii = jnp.linspace(-1, 1, n)
+    x, y = jnp.meshgrid(ii, ii, indexing="ij")
+    cx, cy = 0.25 * jnp.sin(z), 0.25 * jnp.cos(z)
+    r = jnp.sqrt((x - cx) ** 2 + (y - cy) ** 2) + 1e-3
+    vtheta = jnp.where(r < 0.2, r / 0.2, 0.2 / r) * 40.0
+    u = -vtheta * (y - cy) / r
+    mix = 0.5 - 0.5 * jnp.cos(z)
+    noise = (0.5 + 6.0 * mix) * _fbm_spectrum_field(k1, n, slope=3.6 - 1.4 * mix)
+    return (u + noise).astype(jnp.float32)
+
+
+def scale_letkf_like(key, n: int = 600, z: float = 0.0) -> jnp.ndarray:
+    """Rainfall-simulation wind: strong multiscale heterogeneity (the
+    paper's hardest 2-D case) -- mixed small/large-scale features."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    mix = 0.5 - 0.5 * jnp.cos(z)
+    large = gaussian.grf_sample(k1, n, 96.0)
+    small = gaussian.grf_sample(k2, n, 4.0 + 12.0 * (1 - mix))
+    w = gaussian._spatial_weight(k3, n)
+    return (10.0 * large + (1.0 + 7.0 * mix) * w * small
+            + 3.0 * mix * small * large).astype(jnp.float32)
+
+
+def nyx_like(key, n: int = 512, z: float = 0.0) -> jnp.ndarray:
+    """Cosmology baryon velocity: filamentary, heavy-tailed."""
+    k1, k2 = jax.random.split(key)
+    mix = 0.5 - 0.5 * jnp.cos(z)
+    base = _fbm_spectrum_field(k1, n, slope=3.2 - 1.2 * mix)
+    fil = _fbm_spectrum_field(k2, n, slope=3.5)
+    return (1e6 * jnp.tanh(base) * (1.0 + (0.1 + mix) * jnp.abs(fil))).astype(jnp.float32)
+
+
+def qmcpack_like(key, n: int = 96, z: float = 0.0) -> jnp.ndarray:
+    """Electronic orbital: smooth oscillatory standing waves + envelope."""
+    k1, _ = jax.random.split(key)
+    ii = jnp.linspace(0, 1, n)
+    x, y = jnp.meshgrid(ii, ii, indexing="ij")
+    mix = 0.5 - 0.5 * jnp.cos(z)
+    kx, ky = 4 + 14 * mix, 5 + 11 * mix
+    wave = jnp.sin(2 * jnp.pi * kx * x) * jnp.sin(2 * jnp.pi * ky * y)
+    env = jnp.exp(-((x - 0.5) ** 2 + (y - 0.5) ** 2) * 6.0)
+    noise = (0.01 + 0.15 * mix) * _fbm_spectrum_field(k1, n, slope=3.0)
+    return (wave * env + noise).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    name: str
+    generator: Callable
+    n: int                 # slice edge (reduced-size default)
+    full_n: int            # paper's slice edge
+    slices: int            # number of 2-D slices available
+    eps: float             # the paper's error bound for this field
+
+
+FIELDS: Dict[str, FieldSpec] = {
+    "miranda-vx":   FieldSpec("miranda-vx", miranda_like, 384, 384, 64, 1e-5),
+    "miranda-de":   FieldSpec("miranda-de", miranda_like, 384, 384, 64, 1e-5),
+    "cesm-cloud":   FieldSpec("cesm-cloud", cesm_cloud_like, 512, 1800, 48, 1e-5),
+    "hurricane-u":  FieldSpec("hurricane-u", hurricane_like, 500, 500, 48, 1e-2),
+    "scale-u":      FieldSpec("scale-u", scale_letkf_like, 600, 1200, 48, 1e-3),
+    "scale-pressure": FieldSpec("scale-pressure", scale_letkf_like, 600, 1200, 48, 1e-3),
+    "nyx-vx":       FieldSpec("nyx-vx", nyx_like, 512, 512, 48, 1e-2),
+    "qmcpack":      FieldSpec("qmcpack", qmcpack_like, 96, 96, 64, 1e-2),
+}
+
+
+def field_slices(name: str, count: int | None = None, seed: int = 0,
+                 n: int | None = None) -> jnp.ndarray:
+    """(count, n, n) stack of 2-D slices for a named field."""
+    spec = FIELDS[name]
+    count = count or spec.slices
+    n = n or spec.n
+    keys = jax.random.split(
+        jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31) + seed), count)
+    zs = jnp.linspace(0.0, jnp.pi, count)
+    # vary per-slice structure parameter z; different key per slice
+    return jnp.stack([spec.generator(keys[i], n, float(zs[i]))
+                      for i in range(count)])
+
+
+def volume(name: str, shape=(64, 96, 96), seed: int = 0) -> jnp.ndarray:
+    """A 3-D volume assembled from smoothly varying slices (for HOSVD/
+    TTHRESH experiments, paper section 4.5)."""
+    spec = FIELDS[name]
+    d, n = shape[0], shape[1]
+    keys = jax.random.split(
+        jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31) + 7 + seed), 1)
+    zs = jnp.linspace(0.0, jnp.pi, d)
+    slabs = [spec.generator(keys[0], n, float(z)) for z in zs]
+    vol = jnp.stack(slabs)[:, : shape[1], : shape[2]]
+    return vol

@@ -1,0 +1,45 @@
+"""Deterministic synthetic token streams for LM training.
+
+Markov-chain token generator with per-step seeding: step N's batch is a
+pure function of (seed, N), which is what makes checkpoint-restart
+deterministic (the restarted loop regenerates the exact same stream).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@partial(jax.jit, static_argnames=("batch", "seq", "vocab"))
+def _batch(key, batch: int, seq: int, vocab: int) -> jnp.ndarray:
+    """Structured (learnable) token stream: noisy arithmetic progressions."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    start = jax.random.randint(k1, (batch, 1), 0, vocab)
+    stride = jax.random.randint(k2, (batch, 1), 1, 17)
+    base = (start + stride * jnp.arange(seq)[None, :]) % vocab
+    noise = jax.random.bernoulli(k3, 0.1, (batch, seq))
+    rand = jax.random.randint(jax.random.fold_in(k3, 1), (batch, seq), 0, vocab)
+    return jnp.where(noise, rand, base).astype(jnp.int32)
+
+
+def make_data_iter(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """step -> batch dict (tokens/labels [+frames/mrope]) -- deterministic."""
+    def it(step: int) -> Dict[str, jnp.ndarray]:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        toks = _batch(key, batch, seq + 1, cfg.vocab_size)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.family == "encdec":
+            out["frames"] = jax.random.normal(
+                jax.random.fold_in(key, 7),
+                (batch, cfg.encoder_frames, cfg.d_model), jnp.bfloat16) \
+                .astype(jnp.dtype(cfg.dtype))
+        if cfg.family == "vlm":
+            out["mrope_positions"] = jnp.broadcast_to(
+                jnp.arange(seq, dtype=jnp.int32), (3, batch, seq))
+        return out
+    return it

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the Gram kernel (handles padding + transpose)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gram import gram as _k
+
+
+def _pad_to(x: jnp.ndarray, mult_m: int, mult_n: int) -> jnp.ndarray:
+    m, n = x.shape
+    return jnp.pad(x, ((0, (-m) % mult_m), (0, (-n) % mult_n)))
+
+
+def gram(x: jnp.ndarray, transpose: bool = True) -> jnp.ndarray:
+    """Gram matrix of the smaller side; zero padding is exact for X^T X.
+
+    transpose=True  -> X^T X  (n x n)
+    transpose=False -> X X^T  (m x m)  (computed as (X^T)^T (X^T))
+    """
+    x = x.astype(jnp.float32)
+    if not transpose:
+        x = x.T
+    n = x.shape[1]
+    xp = _pad_to(x, _k.DEFAULT_BK, _k.DEFAULT_BN)
+    g = _k.gram_xtx(xp)
+    return g[:n, :n]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the Gram kernel."""
+import jax.numpy as jnp
+
+
+def gram_xtx(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.float32).T @ x.astype(jnp.float32)
+
+
+def gram_xxt(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.float32) @ x.astype(jnp.float32).T

@@ -1,0 +1,19 @@
+"""jit'd public wrapper for the Lorenzo kernel (padding to tile multiples)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.lorenzo import lorenzo as _k
+
+
+def lorenzo2d(x: jnp.ndarray, eps) -> jnp.ndarray:
+    """Lorenzo codes for arbitrary (m, n); edge-pad then crop.
+
+    Edge padding replicates the boundary so cropped codes equal the unpadded
+    kernel's codes (replicated rows produce zero differences).
+    """
+    m, n = x.shape
+    pm, pn = (-m) % _k.DEFAULT_BM, (-n) % _k.DEFAULT_BN
+    xp = jnp.pad(x, ((0, pm), (0, pn)), mode="edge")
+    codes = _k.lorenzo2d(xp, jnp.asarray(eps, jnp.float32))
+    return codes[:m, :n]

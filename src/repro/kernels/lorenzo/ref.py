@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the Lorenzo kernel: repro.compressors.sz semantics."""
+import jax.numpy as jnp
+
+from repro.compressors.sz import lorenzo_encode, lorenzo_decode  # noqa: F401
+
+
+def lorenzo2d(x: jnp.ndarray, eps) -> jnp.ndarray:
+    return lorenzo_encode(x.astype(jnp.float32), eps)

@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the qent kernel (padding + entropy reduction)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.qent import qent as _k
+from repro.kernels.qent import ref as _ref
+
+
+def quantized_entropy(x: jnp.ndarray, eps, num_bins: int = _k.DEFAULT_BINS) -> jnp.ndarray:
+    """Entropy (bits/symbol) of quantized data via the Pallas histogram.
+
+    Padding uses the first element so the pad value lands in an existing
+    bin; its count is subtracted from that bin afterwards.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % _k.DEFAULT_TILE
+    if pad:
+        flat_p = jnp.concatenate([flat, jnp.broadcast_to(flat[:1], (pad,))])
+    else:
+        flat_p = flat
+    hist = _k.qent_histogram(flat_p, jnp.asarray(eps, jnp.float32), bins=num_bins)
+    if pad:
+        first_code = jnp.floor(flat[0] / eps).astype(jnp.int32)
+        idx = jnp.where(first_code % num_bins < 0,
+                        first_code % num_bins + num_bins,
+                        first_code % num_bins)
+        hist = hist.at[idx].add(-pad)
+    return _ref.entropy_bits(hist)

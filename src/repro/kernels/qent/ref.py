@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the qent kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def qent_histogram(x: jnp.ndarray, eps, bins: int = 4096) -> jnp.ndarray:
+    codes = jnp.floor(x.reshape(-1) / eps).astype(jnp.int32)
+    idx = jax.lax.rem(codes, bins)
+    idx = jnp.where(idx < 0, idx + bins, idx)
+    return jnp.zeros((bins,), jnp.int32).at[idx].add(1)
+
+
+def entropy_bits(hist: jnp.ndarray) -> jnp.ndarray:
+    n = jnp.maximum(jnp.sum(hist), 1)
+    p = hist / n
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0))
+
+
+def quantized_entropy(x: jnp.ndarray, eps, bins: int = 4096) -> jnp.ndarray:
+    return entropy_bits(qent_histogram(x, eps, bins))

@@ -1,0 +1,21 @@
+"""jit'd public wrapper for the zfp_block kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.zfp_block import zfp_block as _k
+
+
+def zfp_forward2d(x: jnp.ndarray):
+    """Forward zfp transform of an arbitrary (m, n) slice.
+
+    Edge-pads to tile multiples; returns (coeffs, exponents) cropped back to
+    the 4-padded extent (the compressor consumes whole 4x4 blocks).
+    """
+    m, n = x.shape
+    m4, n4 = m + ((-m) % 4), n + ((-n) % 4)
+    xp = jnp.pad(x, ((0, m4 - m), (0, n4 - n)), mode="edge")
+    pm, pn = (-m4) % _k.DEFAULT_BM, (-n4) % _k.DEFAULT_BN
+    xp = jnp.pad(xp, ((0, pm), (0, pn)), mode="edge")
+    coef, exp = _k.zfp_forward2d(xp)
+    return coef[:m4, :n4], exp[: m4 // 4, : n4 // 4]

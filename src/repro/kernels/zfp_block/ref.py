@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the zfp_block kernel: repro.compressors.zfp semantics
+re-expressed in the kernel's (m, n) coefficient layout."""
+import jax.numpy as jnp
+
+from repro.compressors import zfp as Z
+
+
+def zfp_forward2d(x: jnp.ndarray):
+    q_blocks, e, padded_shape = Z.zfp_transform(x.astype(jnp.float32))
+    m, n = padded_shape
+    coef = Z._from_blocks4(q_blocks, padded_shape)
+    exp = e.reshape(m // 4, n // 4)
+    return coef, exp

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+For each cell this lowers the full production step function (train_step /
+prefill / decode_step) against ShapeDtypeStruct inputs on the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh, compiles it, and records:
+
+  * memory_analysis()      -- proves the cell fits per-device HBM,
+  * cost_analysis()        -- HLO FLOPs / bytes for the roofline,
+  * collective statistics  -- parsed from the per-partition HLO text
+                              (all-gather / all-reduce / reduce-scatter /
+                              all-to-all / collective-permute bytes),
+
+written to benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                get_arch)
+from repro.launch.mesh import make_production_mesh, HW
+from repro.dist import sharding as S
+from repro.models import model as M
+from repro.models import params as PRM
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+# Gradient-accumulation depth per (arch, train shape): keeps per-device
+# live activations inside v5e HBM (16 GB).
+MICROBATCHES = {
+    "deepseek-v2-236b": 16, "qwen2-vl-72b": 16, "phi3.5-moe-42b-a6.6b": 8,
+    "codeqwen1.5-7b": 8, "granite-8b": 8,
+    "stablelm-3b": 4, "granite-3-2b": 4, "whisper-large-v3": 4,
+    "mamba2-370m": 4, "hymba-1.5b": 4,
+}
+
+# long_500k runs only for sub-quadratic archs (DESIGN.md section 6).
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("skipped: full-attention arch cannot serve a 524k dense KV "
+                "cache (sub-quadratic archs only; see DESIGN.md)")
+    return None
+
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\((?:[^()]|\([^()]*\))*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([\d,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum per-device message bytes per collective kind from SPMD HLO."""
+    stats = {k: {"count": 0, "bytes": 0} for k in
+             ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+              "collective-permute")}
+    tops = []
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        shapes = SHAPE_RE.findall(m.group(2))
+        nbytes = 0
+        for dt, dims in shapes:
+            numel = 1
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+            nbytes += numel * DTYPE_BYTES[dt]
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += nbytes
+        tops.append((nbytes, kind, line.strip()[:220]))
+    tops.sort(reverse=True)
+    total_wire = 0
+    for kind, st in stats.items():
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        st["wire_bytes"] = int(st["bytes"] * factor)
+        total_wire += st["wire_bytes"]
+    stats["total_wire_bytes"] = total_wire
+    stats["top"] = [{"bytes": b, "kind": k, "hlo": l} for b, k, l in tops[:12]]
+    return stats
+
+
+def batch_shardings(cfg: ModelConfig, specs: Dict[str, Any], mesh):
+    out = {}
+    for k, v in specs.items():
+        if k == "mrope_positions":
+            out[k] = S.named_sharding(v.shape, (None, "batch", None), mesh)
+        elif k == "frames":
+            out[k] = S.named_sharding(v.shape, ("batch", None, None), mesh)
+        elif k in ("tokens", "labels", "token"):
+            out[k] = S.named_sharding(v.shape, ("batch", None), mesh)
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        elif k == "cache":
+            axes = M.cache_logical_axes(cfg, v)
+            out[k] = jax.tree.map(
+                lambda leaf, a: S.named_sharding(leaf.shape, a, mesh),
+                v, axes)
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               mode: str = "pjit", extra_tag: str = "",
+               unroll: bool = False, microbatch_override=None) -> Dict[str, Any]:
+    if unroll:
+        os.environ["REPRO_UNROLL_SCAN"] = "1"
+    else:
+        os.environ.pop("REPRO_UNROLL_SCAN", None)
+    if mode.startswith("podsync"):
+        os.environ["REPRO_EMBED_REPLICATED"] = "1"
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    skip = cell_supported(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": skip}
+
+    t0 = time.time()
+    with S.use_mesh(mesh):
+        specs = M.input_specs(cfg, shape)
+        param_tree = M.abstract_params(cfg)
+        param_shard = PRM.param_specs(M.param_table(cfg), mesh)
+        in_b = batch_shardings(cfg, specs, mesh)
+
+        if shape.kind == "train":
+            mb = (microbatch_override if microbatch_override is not None
+                  else (1 if unroll else MICROBATCHES.get(arch, 8)))
+            opt_abs = jax.eval_shape(OPT.init, param_tree)
+            opt_shard = OPT.OptState(
+                step=NamedSharding(mesh, P()),
+                mu=jax.tree.map(lambda s: s, param_shard),
+                nu=jax.tree.map(lambda s: s, param_shard))
+            state_abs = TS.TrainState(param_tree, opt_abs, None)
+            state_shard = TS.TrainState(param_shard, opt_shard, None)
+            if mode.startswith("podsync"):
+                # pod-stacked state layout (see train_step.stack_for_podsync)
+                from repro.train.grad_compress import (CompressConfig,
+                                                       init_ef)
+                n_pods = mesh.shape["pod"]
+                compress = (CompressConfig(enabled=True, gate_ratio=0.0)
+                            if mode == "podsync_comp" else None)
+                if compress is not None:
+                    state_abs = TS.TrainState(
+                        state_abs.params, state_abs.opt,
+                        jax.eval_shape(init_ef, param_tree))
+                state_abs = jax.eval_shape(
+                    lambda st: TS.stack_for_podsync(st, n_pods), state_abs)
+                def stack_spec(ns):
+                    return NamedSharding(
+                        mesh, P(*(("pod",) + tuple(ns.spec))))
+                ef_shard = (jax.tree.map(stack_spec, TS.GC.EFState(
+                    jax.tree.map(lambda s: s, param_shard)))
+                    if compress is not None else None)
+                state_shard = TS.TrainState(
+                    jax.tree.map(stack_spec, param_shard),
+                    OPT.OptState(
+                        step=NamedSharding(mesh, P()),
+                        mu=jax.tree.map(stack_spec, param_shard),
+                        nu=jax.tree.map(stack_spec, param_shard)),
+                    ef_shard)
+                step = TS.make_train_step(cfg, microbatches=mb,
+                                          mode="podsync", mesh=mesh,
+                                          compress=compress,
+                                          param_specs=param_shard)
+            else:
+                step = TS.make_train_step(cfg, microbatches=mb,
+                                          mode=mode, mesh=mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shard,
+                              {k: in_b[k] for k in specs}),
+                out_shardings=(state_shard, None),
+                donate_argnums=(0,),     # state buffers reused in place
+            )
+            args = (state_abs, specs)
+        elif shape.kind == "prefill":
+            def fn(params, batch):
+                return M.prefill(params, batch, cfg, shape.seq_len)
+            jitted = jax.jit(fn, in_shardings=(param_shard, in_b),
+                             out_shardings=None)
+            args = (param_tree, specs)
+        else:  # decode
+            def fn(params, cache, token, pos, *extra):
+                mrope = extra[0] if extra else None
+                return M.decode_step(params, cache, token, pos, cfg,
+                                     mrope_positions=mrope)
+            extra_in = ()
+            extra_sh = ()
+            if cfg.family == "vlm":
+                extra_in = (specs["mrope_positions"],)
+                extra_sh = (in_b["mrope_positions"],)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(param_shard, in_b["cache"], in_b["token"],
+                              NamedSharding(mesh, P())) + extra_sh,
+                out_shardings=None,
+                donate_argnums=(1,))     # KV cache updated in place
+            args = (param_tree, specs["cache"], specs["token"],
+                    specs["pos"]) + extra_in
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo)
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    mem_dict = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            mem_dict[attr] = int(getattr(mem, attr, 0) or 0)
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    bta = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+
+    n_params = M.count_params(cfg)
+    n_active = M.active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    # MODEL_FLOPS: 6ND train, 2ND forward-only
+    fl_factor = 6.0 if shape.kind == "train" else 2.0
+    model_flops = fl_factor * n_active * tokens
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "mode": mode + extra_tag,
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem_dict,
+        "flops_per_device": flops,
+        "bytes_per_device": bta,
+        "collectives": coll,
+        "params": n_params, "active_params": n_active,
+        "model_flops_total": model_flops,
+        "microbatches": MICROBATCHES.get(arch, 8) if shape.kind == "train" else 1,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="pjit")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--unroll", action="store_true",
+                    help="cost-accounting build: unrolled scans, mb=1")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape, args.multi_pod))
+    else:
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        mesh_tag = "multi" if mp else "single"
+        tag = f"__{args.mode}" if args.mode != "pjit" else ""
+        tag += "__unroll" if args.unroll else ""
+        tag += f"__{args.tag}" if args.tag else ""
+        out = os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh_tag}{tag}.json")
+        if args.skip_done and os.path.exists(out):
+            print(f"[skip] {arch} x {shape} x {mesh_tag}")
+            continue
+        print(f"[dryrun] {arch} x {shape} x {mesh_tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape, mp, mode=args.mode,
+                             extra_tag=f"__{args.tag}" if args.tag else "",
+                             unroll=args.unroll)
+        except Exception as e:
+            traceback.print_exc()
+            res = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "status": "failed", "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        with open(out, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"  -> {res['status']} "
+              f"(compile {res.get('compile_s', '-')}s, "
+              f"flops/dev {res.get('flops_per_device', 0):.3g}, "
+              f"wire {res.get('collectives', {}).get('total_wire_bytes', 0):.3g}B)",
+              flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+initialization.  Single pod: (data=16, model=16) = 256 chips (TPU v5e pod
+slice); multi-pod: (pod=2, data=16, model=16) = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+# TPU v5e hardware model used by the roofline analysis (per chip).
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # bytes/s
+    "ici_bw": 50e9,                # bytes/s per link
+    "hbm_bytes": 16e9,             # capacity
+}

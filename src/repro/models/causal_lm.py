@@ -1,0 +1,640 @@
+"""Unified decoder-only causal LM covering the assigned families:
+
+  dense    -- stablelm-3b, codeqwen1.5-7b, granite-8b, granite-3-2b
+  moe      -- phi3.5-moe (16e top-2)
+  mla_moe  -- deepseek-v2 (MLA attention, 2 shared + 160 routed top-6)
+  vlm      -- qwen2-vl backbone (M-RoPE; patch frontend stubbed)
+  ssm      -- mamba2 (attention-free)
+  hybrid   -- hymba (parallel attn+SSM heads, SWA + 3 global layers,
+              meta tokens)
+
+Layers run under ``jax.lax.scan`` with stacked parameters (compile-time and
+HLO-size control at 80 layers); non-uniform layers (deepseek's dense first
+layer, hymba's global-attention layers) are unrolled segments around the
+scan.  Remat is applied per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.params import ParamDef
+
+Params = Dict[str, Any]
+
+
+def _unroll_scans() -> bool:
+    """Cost-accounting mode: unroll layer scans so XLA cost analysis counts
+    every layer (lax.scan bodies are otherwise counted once)."""
+    import os
+    return os.environ.get("REPRO_UNROLL_SCAN", "0") == "1"
+
+
+def _remat_policy():
+    """Remat policy knob (REPRO_REMAT=full|dots).
+
+    ``full`` (default): save only layer boundaries -- minimal memory,
+    recompute everything (including the TP all-reduces) in backward.
+    ``dots``: additionally save matmul/collective outputs inside the layer
+    -- backward skips recomputing the heavy einsums *and* their trailing
+    all-reduces, trading ~1-2 GB of activations for collective traffic.
+    """
+    import os
+    mode = os.environ.get("REPRO_REMAT", "full")
+    if mode == "dots":
+        return jax.checkpoint_policies.checkpoint_dots
+    if mode == "tp_outs":
+        # save exactly the two per-layer activations whose producing
+        # einsums carry the tensor-parallel all-reduce
+        return jax.checkpoint_policies.save_only_these_names("tp_ar_out")
+    return None
+
+
+def _checkpoint(fn):
+    pol = _remat_policy()
+    return jax.checkpoint(fn, policy=pol) if pol is not None \
+        else jax.checkpoint(fn)
+
+
+# ===========================================================================
+# Parameter tables
+# ===========================================================================
+
+def _attn_table(n: int, cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    t = {
+        "wq": ParamDef((n, d, hq * hd), ("layers", "fsdp", "model")),
+        "wk": ParamDef((n, d, hkv * hd), ("layers", "fsdp", "model")),
+        "wv": ParamDef((n, d, hkv * hd), ("layers", "fsdp", "model")),
+        "wo": ParamDef((n, hq * hd, d), ("layers", "model", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ParamDef((n, hq * hd), ("layers", "model"), init="zeros")
+        t["bk"] = ParamDef((n, hkv * hd), ("layers", "model"), init="zeros")
+        t["bv"] = ParamDef((n, hkv * hd), ("layers", "model"), init="zeros")
+    return t
+
+
+def _mla_table(n: int, cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamDef((n, d, qr), ("layers", "fsdp", None)),
+        "q_norm": ParamDef((n, qr), ("layers", None), init="ones"),
+        "wq_b": ParamDef((n, qr, h * (dn + dr)), ("layers", None, "model")),
+        "wkv_a": ParamDef((n, d, kvr + dr), ("layers", "fsdp", None)),
+        "kv_norm": ParamDef((n, kvr), ("layers", None), init="ones"),
+        "wk_b": ParamDef((n, kvr, h * dn), ("layers", None, "model")),
+        "wv_b": ParamDef((n, kvr, h * dv), ("layers", None, "model")),
+        "wo": ParamDef((n, h * dv, d), ("layers", "model", "fsdp")),
+    }
+
+
+def _mlp_table(n: int, cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wg": ParamDef((n, d, f), ("layers", "fsdp", "model")),
+        "wu": ParamDef((n, d, f), ("layers", "fsdp", "model")),
+        "wd": ParamDef((n, f, d), ("layers", "model", "fsdp")),
+    }
+
+
+def _norms_table(n: int, cfg: ModelConfig, names) -> Dict[str, ParamDef]:
+    return {k: ParamDef((n, cfg.d_model), ("layers", None), init="ones")
+            for k in names}
+
+
+def _layer_table(n: int, cfg: ModelConfig, moe_layer: bool) -> Dict[str, Any]:
+    """Table for a stack of ``n`` homogeneous layers of this family."""
+    t: Dict[str, Any] = {}
+    fam = cfg.family
+    if fam == "ssm":
+        t["ssm"] = SSM.ssm_param_table(n, cfg)
+        t.update(_norms_table(n, cfg, ["norm1"]))
+        return t
+    if fam == "mla_moe":
+        t["attn"] = _mla_table(n, cfg)
+    else:
+        t["attn"] = _attn_table(n, cfg)
+    if fam == "hybrid":
+        t["ssm"] = SSM.ssm_param_table(n, cfg)
+        d_inner, _ = SSM.ssm_dims(cfg)
+        t["mix_attn"] = ParamDef((n, cfg.d_model), ("layers", None), init="ones")
+        t["mix_ssm"] = ParamDef((n, cfg.d_model), ("layers", None), init="ones")
+    if moe_layer:
+        t["moe"] = MOE.moe_param_table(
+            n, cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.num_experts,
+            cfg.num_shared_experts,
+            shared_d_ff=(cfg.moe_d_ff or cfg.d_ff) * max(cfg.num_shared_experts, 1))
+    else:
+        t["mlp"] = _mlp_table(n, cfg)
+    t.update(_norms_table(n, cfg, ["norm1", "norm2"]))
+    return t
+
+
+def segments(cfg: ModelConfig):
+    """Layer segmentation: list of (kind, count) with kind in
+    scan | dense0 | global."""
+    if cfg.family == "mla_moe" and cfg.dense_first_layer:
+        return [("dense0", 1), ("scan", cfg.num_layers - 1)]
+    if cfg.family == "hybrid" and cfg.num_global_layers:
+        ng = cfg.num_global_layers
+        ns = cfg.num_layers - ng
+        # global layers at start / middle / end, scan segments between
+        per = ns // ng
+        segs = []
+        rem = ns
+        for i in range(ng):
+            segs.append(("global", 1))
+            take = per if i < ng - 1 else rem - per * (ng - 1)
+            if take:
+                segs.append(("scan", take))
+        return segs
+    return [("scan", cfg.num_layers)]
+
+
+def param_table(cfg: ModelConfig) -> Dict[str, Any]:
+    v = cfg.padded_vocab
+    t: Dict[str, Any] = {
+        # embed sharded on d_model (not vocab): vocab-sharded gathers make
+        # the SPMD partitioner fall back to full rematerialization (and
+        # CHECK-fail under partial-manual shard_map).  Under podsync the
+        # partitioner still mis-slices the gather, so the table is fully
+        # replicated there (REPRO_EMBED_REPLICATED=1; ~400 MB for the
+        # podsync demo arch).
+        "embed": ParamDef(
+            (v, cfg.d_model),
+            ((None, None) if __import__("os").environ.get(
+                "REPRO_EMBED_REPLICATED") == "1" else (None, "model")),
+            init="embed", scale=1.0),
+        "final_norm": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "lm_head": ParamDef((cfg.d_model, v), ("fsdp", "model")),
+    }
+    if cfg.meta_tokens:
+        t["meta"] = ParamDef((cfg.meta_tokens, cfg.d_model), (None, "fsdp"))
+    moe_fam = cfg.family in ("moe", "mla_moe")
+    for i, (kind, n) in enumerate(segments(cfg)):
+        if kind == "dense0":
+            # deepseek-v2 first layer: MLA attn + dense MLP (d_ff=12288)
+            dcfg = dataclasses.replace(cfg, d_ff=12288)
+            sub = _layer_table(n, dataclasses.replace(dcfg, family="mla_moe"),
+                               moe_layer=False)
+            t[f"seg{i}"] = sub
+        elif kind == "global":
+            t[f"seg{i}"] = _layer_table(n, cfg, moe_layer=moe_fam)
+        else:
+            t[f"seg{i}"] = _layer_table(n, cfg, moe_layer=moe_fam)
+    return t
+
+
+# ===========================================================================
+# KV caches
+# ===========================================================================
+
+class AttnCache(NamedTuple):
+    k: jnp.ndarray          # (n, B, T, Hkv, hd)   [stacked over layers]
+    v: jnp.ndarray
+    pos: jnp.ndarray        # (n, B, T) absolute positions of slots (or -1)
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray        # (n, B, T, kv_lora)
+    krope: jnp.ndarray      # (n, B, T, rope_dim)
+    pos: jnp.ndarray
+
+
+class HybridCache(NamedTuple):
+    attn: AttnCache
+    conv: jnp.ndarray       # (n, B, K-1, conv_dim)
+    state: jnp.ndarray      # (n, B, H, P, N)
+
+
+def _attn_cache(n: int, b: int, t: int, cfg: ModelConfig, dtype) -> AttnCache:
+    return AttnCache(
+        k=jnp.zeros((n, b, t, cfg.num_kv_heads, cfg.hd), dtype),
+        v=jnp.zeros((n, b, t, cfg.num_kv_heads, cfg.hd), dtype),
+        pos=jnp.full((n, b, t), 10 ** 9, jnp.int32),
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Cache pytree keyed by segment, honouring per-family cache shapes."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    caches = {}
+    extra = cfg.meta_tokens
+    for i, (kind, n) in enumerate(segments(cfg)):
+        if cfg.family == "ssm":
+            c = SSM.init_ssm_cache(batch, cfg, dtype)
+            caches[f"seg{i}"] = HybridCache(
+                attn=None,  # type: ignore
+                conv=c.conv[None].repeat(n, 0) if n > 1 else c.conv[None],
+                state=c.state[None].repeat(n, 0) if n > 1 else c.state[None],
+            )
+            continue
+        if cfg.family == "hybrid":
+            w = cfg.window_size if (kind == "scan" and cfg.window_size
+                                    and cfg.sliding_window_decode) else max_len
+            t = min(w, max_len) + extra
+            c = SSM.init_ssm_cache(batch, cfg, dtype)
+            caches[f"seg{i}"] = HybridCache(
+                attn=_attn_cache(n, batch, t, cfg, dtype),
+                conv=jnp.broadcast_to(c.conv[None], (n,) + c.conv.shape),
+                state=jnp.broadcast_to(c.state[None], (n,) + c.state.shape),
+            )
+            continue
+        if cfg.family == "mla_moe":
+            caches[f"seg{i}"] = MLACache(
+                ckv=jnp.zeros((n, batch, max_len, cfg.kv_lora_rank), dtype),
+                krope=jnp.zeros((n, batch, max_len, cfg.qk_rope_head_dim), dtype),
+                pos=jnp.full((n, batch, max_len), 10 ** 9, jnp.int32),
+            )
+        else:
+            caches[f"seg{i}"] = _attn_cache(n, batch, max_len + extra, cfg, dtype)
+    return caches
+
+
+def cache_logical_axes(cfg: ModelConfig, cache) -> Any:
+    """Logical axes for cache arrays: batch-sharded everywhere, plus a
+    `model`-axis shard on KV heads when they divide the mesh extent, else
+    on the *sequence* dimension (flash-decoding style).  The fallback is
+    what keeps e.g. granite-8b's kv=8 cache from being replicated 16x over
+    the model axis (618 GB -> 2.4 GB/device at decode_32k)."""
+    from repro.dist import sharding as S
+    mesh = S.current_mesh()
+    model_ext = 1
+    if mesh is not None:
+        model_ext = S._mesh_extent(mesh, S.current_rules().get("model", ()))
+    kv_shards = model_ext > 1 and cfg.num_kv_heads % model_ext == 0
+
+    def axes_for(x):
+        if x.ndim == 5 and cfg.family != "ssm":       # (n,B,T,Hkv,hd)
+            if kv_shards:
+                return ("layers", "batch", None, "model", None)
+            return ("layers", "batch", "seq_model", None, None)
+        if x.ndim == 5:                                # ssm state (n,B,H,P,N)
+            return ("layers", "batch", "model", None, None)
+        if x.ndim == 4 and cfg.family == "mla_moe":    # (n,B,T,ckv)
+            return ("layers", "batch", "seq_model", None)
+        if x.ndim == 4:                                # conv (n,B,K-1,C)
+            return ("layers", "batch", None, "model")
+        if x.ndim == 3:                                # pos (n,B,T)
+            return ("layers", "batch", "seq_model")
+        return tuple([None] * x.ndim)
+    return jax.tree.map(axes_for, cache)
+
+
+# ===========================================================================
+# Blocks
+# ===========================================================================
+
+def _project_qkv(x, p, cfg: ModelConfig):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.num_heads, cfg.hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.hd)
+    return q, k, v
+
+
+def _rope_qk(q, k, positions, cfg: ModelConfig, mrope_positions=None):
+    if cfg.family == "vlm" and cfg.mrope_sections:
+        pos3 = (mrope_positions if mrope_positions is not None
+                else jnp.broadcast_to(positions, (3,) + positions.shape))
+        return (L.apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections),
+                L.apply_mrope(k, pos3, cfg.rope_theta, cfg.mrope_sections))
+    return (L.apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary),
+            L.apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary))
+
+
+def attn_block(x, p, cfg: ModelConfig, *, window: int = 0,
+               cache: Optional[AttnCache] = None,
+               pos_offset=0, mrope_positions=None):
+    """Full/windowed GQA attention; with cache -> decode/prefill update.
+
+    Returns (out, new_cache_entry or None).  Cache entries here are
+    per-layer (B,T,...) -- stacking over layers happens in the scan driver.
+    """
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(x, p, cfg)
+    positions = pos_offset + jnp.arange(s)[None, :]       # (1,S) broadcast
+    q, k = _rope_qk(q, k, positions, cfg, mrope_positions)
+    q = shard(q, "batch", None, "model", None)
+    k = shard(k, "batch", None, "model", None)
+    v = shard(v, "batch", None, "model", None)
+
+    if cache is None:
+        out = L.attention(q, k, v, causal=True, q_offset=0, window=window)
+        new = None
+    elif s == 1:  # decode: ring-buffer (windowed) or linear cache write
+        ck, cv, cpos = cache
+        t = ck.shape[1]
+        slot = jnp.asarray(pos_offset) % t
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(positions.astype(jnp.int32), (b, 1)),
+            (0, slot))
+        out = L.attention(q, ck, cv, causal=True, q_offset=positions[0, 0],
+                          window=window, kv_positions=cpos)
+        new = AttnCache(ck, cv, cpos)
+    else:  # prefill: attend over the full local K/V, cache stores the tail
+        ck, cv, cpos = cache
+        t = ck.shape[1]
+        k_tail, v_tail = k[:, -t:], v[:, -t:]
+        pos_tail = jnp.broadcast_to(positions[:, -t:].astype(jnp.int32),
+                                    (b, min(s, t)))
+        if t < s:  # ring buffer: place position p at slot p % t
+            shift = s % t
+            k_tail = jnp.roll(k_tail, shift, axis=1)
+            v_tail = jnp.roll(v_tail, shift, axis=1)
+            pos_tail = jnp.roll(pos_tail, shift, axis=1)
+        ck = jax.lax.dynamic_update_slice(ck, k_tail, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_tail, (0, 0, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cpos, pos_tail, (0, 0))
+        out = L.attention(q, k, v, causal=True, q_offset=0, window=window)
+        new = AttnCache(ck, cv, cpos)
+    out = out.reshape(b, s, cfg.num_heads * cfg.hd)
+    out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+    out = _checkpoint_name(out, "tp_ar_out")
+    return out, new
+
+
+def mla_block(x, p, cfg: ModelConfig, *, cache: Optional[MLACache] = None,
+              pos_offset=0):
+    """DeepSeek-V2 multi-head latent attention.
+
+    Training / prefill (S > 1) use the *expanded* form -- per-head K/V are
+    decompressed from the latent and fed to the chunked-query attention
+    (heads shard over ``model``).  Single-token decode uses the *absorbed*
+    form: scores are taken against the compressed latent directly, so the
+    cache stores only (c_kv, k_rope) -- MLA's memory saving."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = pos_offset + jnp.arange(s)[None, :]
+
+    cq = L.rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"])
+    q = jnp.einsum("bsr,rk->bsk", cq, p["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    q_nope = shard(q_nope, "batch", None, "model", None)
+    q_rope = shard(q_rope, "batch", None, "model", None)
+
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv, k_rope_in = kv_a[..., : cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    ckv = L.rms_norm(ckv, p["kv_norm"])
+    k_rope = L.apply_rope(k_rope_in[:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0]         # shared across heads
+
+    new = None
+    if cache is not None:
+        cckv, ckr, cpos = cache
+        t = cckv.shape[1]
+        if s == 1:
+            slot = jnp.asarray(pos_offset) % t
+            cckv = jax.lax.dynamic_update_slice(cckv, ckv, (0, slot, 0))
+            ckr = jax.lax.dynamic_update_slice(ckr, k_rope, (0, slot, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                cpos, jnp.broadcast_to(positions.astype(jnp.int32), (b, 1)),
+                (0, slot))
+        else:
+            cckv = jax.lax.dynamic_update_slice(cckv, ckv[:, -t:], (0, 0, 0))
+            ckr = jax.lax.dynamic_update_slice(ckr, k_rope[:, -t:], (0, 0, 0))
+            cpos = jax.lax.dynamic_update_slice(
+                cpos, jnp.broadcast_to(
+                    positions[:, -t:].astype(jnp.int32), (b, min(s, t))),
+                (0, 0))
+        new = MLACache(cckv, ckr, cpos)
+
+    scale = (dn + dr) ** -0.5
+    if s > 1:
+        # expanded form: decompress per-head K/V, chunked attention
+        wk_b = p["wk_b"].reshape(cfg.kv_lora_rank, h, dn)
+        wv_b = p["wv_b"].reshape(cfg.kv_lora_rank, h, dv)
+        k_nope = jnp.einsum("btr,rhn->bthn", ckv, wk_b)
+        v = jnp.einsum("btr,rhv->bthv", ckv, wv_b)
+        k_nope = shard(k_nope, "batch", None, "model", None)
+        v = shard(v, "batch", None, "model", None)
+        kr = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kk = jnp.concatenate([k_nope, kr], axis=-1)
+        out = L.attention(qq, kk, v, causal=True, q_offset=0, scale=scale)
+    else:
+        # absorbed decode: score against the latent cache directly
+        cckv, ckr, cpos = new
+        wk_b = p["wk_b"].reshape(cfg.kv_lora_rank, h, dn)
+        q_eff = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)   # (B,1,H,kvr)
+        scores = (jnp.einsum("bshr,btr->bhst", q_eff, cckv)
+                  + jnp.einsum("bshr,btr->bhst", q_rope, ckr))
+        scores = scores.astype(jnp.float32) * scale
+        qpos = positions[0]                                  # (1,)
+        mask = cpos[:, None, None, :] <= qpos[None, None, :, None]
+        scores = jnp.where(mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        lat = jnp.einsum("bhst,btr->bshr", w, cckv)          # (B,1,H,kvr)
+        wv_b = p["wv_b"].reshape(cfg.kv_lora_rank, h, dv)
+        out = jnp.einsum("bshr,rhv->bshv", lat, wv_b)
+    out = out.reshape(b, s, h * dv)
+    return jnp.einsum("bsk,kd->bsd", out, p["wo"]), new
+
+
+def mlp_or_moe(x, p, cfg: ModelConfig, moe_layer: bool):
+    if moe_layer:
+        return MOE.moe_ffn(
+            x, p["moe"], num_experts=cfg.num_experts,
+            top_k=cfg.experts_per_token, capacity_factor=cfg.capacity_factor)
+    return L.swiglu(x, p["mlp"]["wg"], p["mlp"]["wu"], p["mlp"]["wd"])
+
+
+def layer_fwd(x, lp, cfg: ModelConfig, *, moe_layer: bool, window: int = 0,
+              cache=None, pos_offset=0, mrope_positions=None):
+    """One transformer layer of any family.  cache: per-layer entry."""
+    fam = cfg.family
+    if fam == "ssm":
+        h = L.rms_norm(x, lp["norm1"])
+        sc = (SSM.SSMCache(cache.conv, cache.state)
+              if cache is not None else None)
+        y, new_sc = SSM.mamba_mixer(h, lp["ssm"], cfg, sc)
+        newc = (HybridCache(None, new_sc.conv, new_sc.state)
+                if new_sc is not None else None)
+        return x + y, newc
+
+    h = L.rms_norm(x, lp["norm1"])
+    if fam == "mla_moe":
+        a, new_attn = mla_block(h, lp["attn"], cfg, cache=cache,
+                                pos_offset=pos_offset)
+    else:
+        ac = cache.attn if fam == "hybrid" and cache is not None else cache
+        a, new_attn = attn_block(h, lp["attn"], cfg, window=window,
+                                 cache=ac, pos_offset=pos_offset,
+                                 mrope_positions=mrope_positions)
+    if fam == "hybrid":
+        sc = (SSM.SSMCache(cache.conv, cache.state)
+              if cache is not None else None)
+        sy, new_sc = SSM.mamba_mixer(h, lp["ssm"], cfg, sc)
+        a = 0.5 * (a * lp["mix_attn"][None, None, :]
+                   + sy * lp["mix_ssm"][None, None, :])
+        newc = (HybridCache(new_attn, new_sc.conv, new_sc.state)
+                if cache is not None else None)
+    else:
+        newc = new_attn
+    x = x + a
+    h2 = L.rms_norm(x, lp["norm2"])
+    x = x + mlp_or_moe(h2, lp, cfg, moe_layer)
+    return x, newc
+
+
+# ===========================================================================
+# Model driver: embed -> segments (scan/unrolled) -> norm -> head
+# ===========================================================================
+
+def _take_layer(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _seg_window(cfg: ModelConfig, kind: str) -> int:
+    if cfg.family == "hybrid" and kind == "scan" and cfg.window_size:
+        return cfg.window_size
+    return 0
+
+
+def forward(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            *, caches=None, pos_offset=0, mrope_positions=None,
+            remat: bool = True):
+    """tokens: (B, S) int32 -> logits-ready hidden (B, S(+meta), D).
+
+    With ``caches`` (dict per segment) also returns updated caches.
+    """
+    x = params["embed"].astype(jnp.dtype(cfg.dtype))[tokens]
+    x = shard(x, "batch", None, None)
+    if cfg.meta_tokens and (caches is None or tokens.shape[1] > 1):
+        meta = jnp.broadcast_to(
+            params["meta"].astype(x.dtype)[None],
+            (x.shape[0], cfg.meta_tokens, x.shape[-1]))
+        x = jnp.concatenate([meta, x], axis=1)
+
+    new_caches = {} if caches is not None else None
+    moe_fam = cfg.family in ("moe", "mla_moe")
+    for i, (kind, n) in enumerate(segments(cfg)):
+        seg_p = params[f"seg{i}"]
+        window = _seg_window(cfg, kind)
+        moe_layer = moe_fam and kind != "dense0"
+        seg_cache = caches[f"seg{i}"] if caches is not None else None
+
+        if kind != "scan" or n == 1:
+            lp = _take_layer(seg_p, 0)
+            lc = _take_layer(seg_cache, 0) if seg_cache is not None else None
+            x, nc = layer_fwd(x, lp, cfg, moe_layer=moe_layer, window=window,
+                              cache=lc, pos_offset=pos_offset,
+                              mrope_positions=mrope_positions)
+            if new_caches is not None:
+                new_caches[f"seg{i}"] = jax.tree.map(
+                    lambda a: a[None], nc) if nc is not None else None
+            continue
+
+        def body(carry, xs):
+            h = carry
+            lp, lc = xs
+            h, nc = layer_fwd(h, lp, cfg, moe_layer=moe_layer, window=window,
+                              cache=lc, pos_offset=pos_offset,
+                              mrope_positions=mrope_positions)
+            return h, nc
+
+        body_fn = _checkpoint(body) if remat else body
+        if _unroll_scans():
+            # cost-accounting mode (dryrun --unroll): identical math without
+            # the while loop, so compiled.cost_analysis() sees every layer
+            ncs_list = []
+            for li in range(n):
+                xs_i = jax.tree.map(lambda a, _li=li: a[_li],
+                                    (seg_p, seg_cache))
+                x, nc_i = body_fn(x, xs_i)
+                ncs_list.append(nc_i)
+            ncs = (jax.tree.map(lambda *a: jnp.stack(a), *ncs_list)
+                   if ncs_list and ncs_list[0] is not None else None)
+        else:
+            x, ncs = jax.lax.scan(body_fn, x, (seg_p, seg_cache))
+        if new_caches is not None:
+            new_caches[f"seg{i}"] = ncs
+
+    x = L.rms_norm(x, params["final_norm"])
+    if cfg.meta_tokens and (caches is None or tokens.shape[1] > 1):
+        x = x[:, cfg.meta_tokens:]
+    return (x, new_caches) if caches is not None else x
+
+
+def logits_fn(params: Params, hidden: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("bsd,dv->bsv", hidden, params["lm_head"].astype(hidden.dtype))
+
+
+def xent_loss(params: Params, hidden: jnp.ndarray, labels: jnp.ndarray,
+              vocab: int, chunk: int = 512) -> jnp.ndarray:
+    """Chunked softmax cross-entropy over the (padded) vocab.
+
+    The (B, S, V) logits tensor is never materialized: sequence chunks of
+    ``chunk`` positions are processed in a scan (512 x 152k logits per step
+    for the largest vocab)."""
+    b, s, d = hidden.shape
+    assert s % chunk == 0 or s < chunk, (s, chunk)
+    chunk = min(chunk, s)
+    nc = s // chunk
+    h = hidden.reshape(b, nc, chunk, d)
+    y = labels.reshape(b, nc, chunk)
+    w = params["lm_head"]
+
+    def body(acc, i):
+        logit = jnp.einsum("bcd,dv->bcv", h[:, i], w.astype(hidden.dtype))
+        logit = logit.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logit, axis=-1)
+        gold = jnp.take_along_axis(logit, y[:, i][..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), ()
+
+    from repro.dist.sharding import pvary_manual
+    init = pvary_manual(jnp.float32(0.0))
+    if _unroll_scans():
+        total = init
+        for i in range(nc):
+            total, _ = body(total, i)
+    else:
+        total, _ = jax.lax.scan(body, init, jnp.arange(nc))
+    return total / (b * s)
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            remat: bool = True) -> jnp.ndarray:
+    hidden = forward(params, batch["tokens"], cfg, remat=remat,
+                     mrope_positions=batch.get("mrope_positions"))
+    return xent_loss(params, hidden, batch["labels"], cfg.padded_vocab)
+
+
+def prefill(params: Params, tokens: jnp.ndarray, cfg: ModelConfig,
+            max_len: int, dtype=None):
+    """Returns (last-token logits, populated cache)."""
+    caches = init_cache(cfg, tokens.shape[0], max_len, dtype)
+    hidden, caches = forward(params, tokens, cfg, caches=caches)
+    logits = logits_fn(params, hidden[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(params: Params, caches, token: jnp.ndarray,
+                pos, cfg: ModelConfig, mrope_positions=None):
+    """token: (B, 1) int32; pos: scalar absolute position (incl. meta)."""
+    off = pos + (cfg.meta_tokens or 0)
+    hidden, caches = forward(params, token, cfg, caches=caches,
+                             pos_offset=off, mrope_positions=mrope_positions)
+    return logits_fn(params, hidden)[:, 0], caches

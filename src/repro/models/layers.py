@@ -1,0 +1,222 @@
+"""Shared model layers: norms, RoPE variants, chunked attention, MLPs.
+
+All functions are pure; parameters arrive as dict subtrees created from the
+declarative tables in each family module.  Activation sharding is expressed
+with logical axes via ``repro.dist.sharding.shard``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.dist.sharding import shard
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with f32 internals and *input-dtype cotangents*.
+
+    The custom VJP keeps backward math in f32 while guaranteeing dx comes
+    back in x.dtype, so bf16 activation-grad all-reduces cannot be widened
+    by cotangent dtype leaks.  (Perf iteration [train-2] found the f32 ARs
+    observed on the CPU backend are an XLA-CPU promotion -- TPU keeps bf16
+    -- so this change is type hygiene, not the measured win; see
+    EXPERIMENTS.md section Perf.)
+    """
+    return _rms_norm_fwd(x, gamma, eps)[0]
+
+
+def _rms_norm_fwd(x, gamma, eps):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    y = (xf * r * gamma.astype(jnp.float32)).astype(x.dtype)
+    return y, (x, gamma, r)
+
+
+def _rms_norm_bwd(eps, res, g):
+    x, gamma, r = res
+    d = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32) * gamma.astype(jnp.float32)
+    s = jnp.sum(gf * xf, axis=-1, keepdims=True)
+    dx = r * gf - xf * (r ** 3) * (s / d)
+    dgamma = jnp.sum(g.astype(jnp.float32) * xf * r,
+                     axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dgamma.astype(gamma.dtype)
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def layer_norm(x: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(rot_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               partial: float = 1.0) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rot = int(hd * partial)
+    rot -= rot % 2
+    freqs = rope_freqs(rot, theta)                        # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE.  positions3: (3, ..., S) for (t, h, w); frequency
+    pairs are split into ``sections`` (per half), each using its own
+    position stream."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    # section id per frequency pair
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=hd // 2)
+    pos = positions3[sec_id]                              # (hd/2, ..., S)
+    pos = jnp.moveaxis(pos, 0, -1)                        # (..., S, hd/2)
+    ang = pos.astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (chunked over query blocks: memory-efficient for 32k prefill)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k):
+    """q: (B,S,Hq,hd), k: (B,T,Hkv,hd) -> (B,Hq,S,T) with GQA grouping."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k)
+    return scores.reshape(b, hkv * g, s, k.shape[1])
+
+
+def _gqa_out(w, v):
+    """w: (B,Hq,S,T), v: (B,T,Hkv,hd) -> (B,S,Hq,hd)."""
+    b, hq, s, t = w.shape
+    hkv = v.shape[2]
+    g = hq // hkv
+    w = w.reshape(b, hkv, g, s, t)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, hq, v.shape[-1])
+
+
+def attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    q_offset: int | jnp.ndarray = 0,
+    window: int = 0,
+    chunk: int = 1024,
+    kv_positions: Optional[jnp.ndarray] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Chunked-query GQA attention.
+
+    q: (B, S, Hq, hd); k, v: (B, T, Hkv, hd).  Rows are processed in query
+    chunks so the (chunk, T) score block -- not (S, T) -- is materialized:
+    the standard memory-efficient schedule for 32k-token prefill.
+    q_offset: absolute position of q[0] (decode: pos; prefill: 0).
+    window > 0 adds a sliding-window constraint.
+    kv_positions: (B, T) absolute positions of cache slots (ring buffers).
+    """
+    b, s, hq, hd = q.shape
+    t = k.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q * scale).astype(q.dtype)
+    if kv_positions is None:
+        kv_pos = jnp.arange(t)[None, :]                   # (1, T)
+    else:
+        kv_pos = kv_positions                             # (B, T)
+
+    def block(qc, qpos):
+        # qc: (B, C, Hq, hd); qpos: (C,) absolute positions
+        scores = _gqa_scores(qc, k).astype(jnp.float32)   # (B,Hq,C,T)
+        mask = jnp.ones((qc.shape[0] if kv_pos.shape[0] > 1 else 1,
+                         1, qc.shape[1], t), bool)
+        if causal:
+            mask &= kv_pos[:, None, None, :] <= qpos[None, None, :, None]
+        if window:
+            mask &= kv_pos[:, None, None, :] > (qpos[None, None, :, None] - window)
+        scores = jnp.where(mask, scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return _gqa_out(w, v)
+
+    if s <= chunk:
+        qpos = q_offset + jnp.arange(s)
+        return block(qf, qpos)
+
+    vd = v.shape[-1]                  # value head dim (MLA: != query hd)
+    pad = (-s) % chunk
+    if pad:                           # ragged tails (meta tokens, enc frames)
+        qf = jnp.concatenate(
+            [qf, jnp.zeros((b, pad, hq, hd), qf.dtype)], axis=1)
+    nc = (s + pad) // chunk
+    qcs = qf.reshape(b, nc, chunk, hq, hd)
+
+    def body(i, acc):
+        qpos = q_offset + i * chunk + jnp.arange(chunk)
+        out = block(qcs[:, i], qpos)
+        return jax.lax.dynamic_update_slice(
+            acc, out[:, None], (0, i, 0, 0, 0))
+
+    from repro.dist.sharding import pvary_manual
+    acc = pvary_manual(jnp.zeros((b, nc, chunk, hq, vd), q.dtype))
+    acc = jax.lax.fori_loop(0, nc, body, acc)
+    return acc.reshape(b, s + pad, hq, vd)[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x, wg, wu, wd):
+    """SwiGLU MLP: x (B,S,D); wg/wu (D,F); wd (F,D).
+
+    The down-projection output is checkpoint-named: its producing einsum
+    carries the TP all-reduce, so saving it under REPRO_REMAT=tp_outs
+    avoids re-running that collective in backward."""
+    g = jnp.einsum("bsd,df->bsf", x, wg)
+    u = jnp.einsum("bsd,df->bsf", x, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard(h, "batch", None, "model")
+    out = jnp.einsum("bsf,fd->bsd", h, wd)
+    return _checkpoint_name(out, "tp_ar_out")
+
+
+def gelu_mlp(x, w1, b1, w2, b2):
+    h = jnp.einsum("bsd,df->bsf", x, w1) + b1
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "batch", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, w2) + b2

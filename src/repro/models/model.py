@@ -1,0 +1,153 @@
+"""Unified model facade: build any assigned architecture from its config.
+
+Provides param tables / abstract trees (for AOT lowering at 236B scale
+without allocation), loss / prefill / decode entry points, and
+ShapeDtypeStruct input specs for every (shape x kind) dry-run cell.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import causal_lm as CLM
+from repro.models import whisper as WSP
+from repro.models import params as PRM
+
+
+def param_table(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return WSP.param_table(cfg)
+    return CLM.param_table(cfg)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return PRM.init_params(param_table(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return PRM.abstract_params(param_table(cfg))
+
+
+def param_specs(cfg: ModelConfig, mesh=None):
+    return PRM.param_specs(param_table(cfg), mesh)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return PRM.count(param_table(cfg))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE: only routed-in experts count)."""
+    total = count_params(cfg)
+    if cfg.num_experts:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        per_expert = 3 * cfg.d_model * ff
+        moe_layers = cfg.num_layers - (1 if cfg.dense_first_layer else 0)
+        inactive = (cfg.num_experts - cfg.experts_per_token) * per_expert * moe_layers
+        return total - inactive
+    return total
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return WSP.loss_fn(params, batch, cfg)
+    return CLM.loss_fn(params, batch, cfg)
+
+
+def prefill(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            max_len: int):
+    if cfg.family == "encdec":
+        memory = WSP.encode(params, batch["frames"], cfg)
+        cache = WSP.init_cache(params, memory, cfg, max_len)
+        hidden, cache = WSP.decode(params, batch["tokens"], memory, cfg, cache)
+        logits = CLM.logits_fn(params, hidden[:, -1:])
+        return logits[:, 0], cache
+    return CLM.prefill(params, batch["tokens"], cfg, max_len)
+
+
+def decode_step(params, cache, token: jnp.ndarray, pos, cfg: ModelConfig,
+                mrope_positions=None):
+    """token: (B, 1); pos: scalar int32 (current absolute position)."""
+    if cfg.family == "encdec":
+        # memory unused at decode: cross-K/V live in the cache
+        b = token.shape[0]
+        x, cache = WSP.decode(params, token, None, cfg, cache, pos_offset=pos)
+        return CLM.logits_fn(params, x)[:, 0], cache
+    return CLM.decode_step(params, cache, token, pos, cfg,
+                           mrope_positions=mrope_positions)
+
+
+def init_cache(cfg: ModelConfig, params_or_abstract, batch: int, max_len: int):
+    """Cache pytree; whisper needs memory-shaped cross-K/V placeholders."""
+    if cfg.family == "encdec":
+        hq, hd = cfg.num_heads, cfg.hd
+        nd, f = cfg.num_layers, cfg.encoder_frames
+        adt = jnp.dtype(cfg.dtype)
+        return WSP.WhisperCache(
+            k=jnp.zeros((nd, batch, max_len, hq, hd), adt),
+            v=jnp.zeros((nd, batch, max_len, hq, hd), adt),
+            pos=jnp.full((nd, batch, max_len), 10 ** 9, jnp.int32),
+            xk=jnp.zeros((nd, batch, f, hq, hd), adt),
+            xv=jnp.zeros((nd, batch, f, hq, hd), adt),
+        )
+    return CLM.init_cache(cfg, batch, max_len)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, None, batch, max_len))
+
+
+def cache_logical_axes(cfg: ModelConfig, cache):
+    if cfg.family == "encdec":
+        def axes_for(x):
+            if x.ndim == 5:
+                return ("layers", "batch", None, "model", None)
+            return ("layers", "batch", None)
+        return jax.tree.map(axes_for, cache)
+    return CLM.cache_logical_axes(cfg, cache)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs) per dry-run cell
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for a (arch x shape) cell.
+
+    train:   {tokens, labels (B,S)} (+frames for encdec, +mrope for vlm)
+    prefill: {tokens (B,S)} (+extras)
+    decode:  {token (B,1), pos (), cache}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    if shape.kind == "train":
+        out = {"tokens": tok(b, s), "labels": tok(b, s)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["mrope_positions"] = tok(3, b, s)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": tok(b, s)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["mrope_positions"] = tok(3, b, s)
+        return out
+    # decode
+    out = {
+        "token": tok(b, 1),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": abstract_cache(cfg, b, s),
+    }
+    if cfg.family == "vlm":
+        out["mrope_positions"] = tok(3, b, 1)
+    return out

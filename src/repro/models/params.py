@@ -1,0 +1,69 @@
+"""Declarative parameter tables.
+
+A model declares its parameters once as a nested dict of ``ParamDef``;
+``init_params`` materializes them, ``logical_axes`` yields the sharding
+tree, and ``abstract_params`` gives ShapeDtypeStructs for AOT lowering
+without ever allocating the (potentially multi-hundred-GB) tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis names
+    init: str = "normal"                   # normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(table, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(table, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, d.dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, d.dtype))
+        else:
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            std = d.scale / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, d.shape, jnp.float32) * std)
+                       .astype(d.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def logical_axes(table):
+    return jax.tree.map(lambda d: d.axes, table, is_leaf=_is_def)
+
+
+def abstract_params(table):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), table, is_leaf=_is_def)
+
+
+def param_specs(table, mesh=None):
+    """Tree of NamedShardings for the whole parameter table."""
+    from repro.dist import sharding as S
+    return jax.tree.map(
+        lambda d: S.named_sharding(d.shape, d.axes, mesh), table, is_leaf=_is_def)
+
+
+def count(table) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(table, is_leaf=_is_def))

@@ -1,0 +1,237 @@
+"""Mamba2 (SSD -- state-space duality) mixer: chunked train scan + O(1) decode.
+
+Training uses the SSD chunked algorithm (Dao & Gu 2024): quadratic
+attention-like computation within chunks, linear state passing between
+chunks.  Decode is a single recurrent state update -- the property that
+makes the ``long_500k`` cell feasible for SSM/hybrid archs.
+
+Layout: x (B, S, H, P) heads; B/C (B, S, G, N) groups; A scalar per head;
+dt per head per step.  Heads shard over the ``model`` mesh axis when
+divisible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models.params import ParamDef
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads
+
+
+def ssm_param_table(layers: int, cfg):
+    d_inner, heads = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = d_inner + 2 * g * n
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "in_proj": ParamDef(
+            (layers, cfg.d_model, 2 * d_inner + 2 * g * n + heads),
+            ("layers", "fsdp", "model")),
+        "conv_w": ParamDef((layers, cfg.ssm_conv, conv_dim),
+                           ("layers", None, "model")),
+        "conv_b": ParamDef((layers, conv_dim), ("layers", "model"), init="zeros"),
+        "a_log": ParamDef((layers, heads), ("layers", "model"), init="zeros",
+                          dtype=jnp.float32),
+        "d_skip": ParamDef((layers, heads), ("layers", "model"), init="ones",
+                           dtype=jnp.float32),
+        "dt_bias": ParamDef((layers, heads), ("layers", "model"), init="zeros",
+                            dtype=jnp.float32),
+        "norm_g": ParamDef((layers, d_inner), ("layers", "model"), init="ones"),
+        "out_proj": ParamDef((layers, d_inner, cfg.d_model),
+                             ("layers", "model", "fsdp")),
+    }
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray    # (B, K-1, conv_dim) last inputs for the short conv
+    state: jnp.ndarray   # (B, H, P, N) recurrent state
+
+
+def init_ssm_cache(batch: int, cfg, dtype=jnp.bfloat16) -> SSMCache:
+    d_inner, heads = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, heads, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32),
+    )
+
+
+def _split_proj(xz: jnp.ndarray, cfg):
+    d_inner, heads = ssm_dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z, xbc_dt = jnp.split(xz, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 history: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv, window K: (B,S,C) -> (B,S,C).
+
+    ``history``: (B, K-1, C) values preceding position 0 (decode cache)."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    xp = jnp.concatenate([history, xbc], axis=1)
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _segsum(da: jnp.ndarray) -> jnp.ndarray:
+    """da: (..., Q) -> (..., Q, Q) lower-tri cumulative sums
+    L[i, j] = sum_{j < m <= i} da[m] (=-inf above diagonal)."""
+    q = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(x: jnp.ndarray, b_in: jnp.ndarray, c_in: jnp.ndarray,
+                dt: jnp.ndarray, a: jnp.ndarray, d_skip: jnp.ndarray,
+                chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    x (B,S,H,P), b_in/c_in (B,S,G,N), dt (B,S,H) [post-softplus],
+    a (H,) negative.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    bc = jnp.repeat(b_in.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(c_in.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    da = dtc * a[None, None, None, :]                    # (B,nc,Q,H)
+    da = jnp.moveaxis(da, -1, 2)                         # (B,nc,H,Q)
+
+    # intra-chunk (quadratic within chunk)
+    lmat = jnp.exp(_segsum(da))                          # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bnqhx,bnkhx->bnhqk", cc, bc)    # (B,nc,H,Q,Q)
+    scores = scores * lmat.astype(scores.dtype)
+    dx = xc * dtc[..., None]                             # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", scores, dx)
+
+    # chunk end-states: item k decays by exp(sum_{m>k} da_m) -- note the
+    # *exclusive* tail sum, matching the recurrence h_t = e^{da_t} h_{t-1} + ...
+    cs = jnp.cumsum(da, axis=-1)
+    decay_to_end = jnp.exp(cs[..., -1:] - cs)
+    # state_n = sum_k decay(end<-k) * B_k x_k : (B,nc,H,P,N)
+    states = jnp.einsum("bnhk,bnkhx,bnkhp->bnhpx",
+                        decay_to_end.astype(dx.dtype), bc, dx)
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(jnp.sum(da, axis=-1))          # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp
+        h_new = h_prev * dec[..., None, None] + st.astype(jnp.float32)
+        return h_new, h_prev
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    states_t = jnp.moveaxis(states, 1, 0)                # (nc,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)            # (nc,B,H)
+    final, h_prevs = jax.lax.scan(scan_fn, init_state, (states_t, decay_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y += C_q * decay(q<-start) * h_prev
+    decay_in = jnp.exp(jnp.cumsum(da, axis=-1))          # (B,nc,H,Q)
+    y_inter = jnp.einsum("bnqhx,bnhq,bnhpx->bnqhp",
+                         cc, decay_in.astype(cc.dtype),
+                         h_prevs.astype(cc.dtype))
+    y = y_intra + y_inter + dx * d_skip[None, None, None, :, None].astype(dx.dtype)
+    return y.reshape(bsz, s, h, p), final
+
+
+def ssm_step(x: jnp.ndarray, b_in: jnp.ndarray, c_in: jnp.ndarray,
+             dt: jnp.ndarray, a: jnp.ndarray, d_skip: jnp.ndarray,
+             state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token recurrence: x (B,H,P), b/c (B,G,N), dt (B,H)."""
+    h = x.shape[1]
+    rep = h // b_in.shape[1]
+    bb = jnp.repeat(b_in, rep, axis=1)                   # (B,H,N)
+    ccd = jnp.repeat(c_in, rep, axis=1)
+    decay = jnp.exp(dt * a[None, :])                     # (B,H)
+    dx = x * dt[..., None]
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bhn,bhp->bhpn", bb, dx).astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state.astype(ccd.dtype), ccd)
+    y = y + dx * d_skip[None, :, None].astype(dx.dtype)
+    return y, state
+
+
+def mamba_mixer(x: jnp.ndarray, p: dict, cfg,
+                cache: Optional[SSMCache] = None,
+                ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """Full mamba2 mixer: in_proj -> conv -> SSD/step -> gated norm -> out.
+
+    x: (B, S, D).  With ``cache`` and S == 1, performs a decode step and
+    returns the updated cache."""
+    bsz, s, d = x.shape
+    d_inner, heads = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xz = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(xz, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])
+    a = -jnp.exp(p["a_log"])
+
+    decode = cache is not None and s == 1
+    if decode:
+        hist = cache.conv
+        new_conv = jnp.concatenate([hist, xbc], axis=1)[:, 1:]
+        xbc_c = _causal_conv(xbc, p["conv_w"], p["conv_b"], hist)
+    else:
+        new_conv = None
+        xbc_c = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b_in, c_in = jnp.split(xbc_c, [d_inner, d_inner + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, heads, cfg.ssm_head_dim)
+    b_in = b_in.reshape(bsz, s, g, n)
+    c_in = c_in.reshape(bsz, s, g, n)
+    xs = shard(xs, "batch", None, "model", None)
+
+    if decode:
+        y, new_state = ssm_step(xs[:, 0], b_in[:, 0], c_in[:, 0], dt[:, 0],
+                                a, p["d_skip"], cache.state)
+        y = y[:, None]
+        new_cache = SSMCache(conv=new_conv, state=new_state)
+    else:
+        init = cache.state if cache is not None else None
+        # largest chunk <= cfg.ssm_chunk dividing S (meta tokens can make
+        # S a non-multiple; e.g. hymba prefill 32768+128)
+        chunk = cfg.ssm_chunk
+        while s % chunk:
+            chunk //= 2
+            if chunk <= 1:
+                chunk = 1
+                break
+        y, final = ssd_forward(xs, b_in, c_in, dt, a, p["d_skip"],
+                               chunk, init)
+        # prefill: stash the conv-window tail for subsequent decode steps
+        new_cache = (SSMCache(conv=xbc[:, -(cfg.ssm_conv - 1):].astype(
+                         cache.conv.dtype), state=final)
+                     if cache is not None else None)
+
+    y = y.reshape(bsz, s, d_inner)
+    # gated RMSNorm (mamba2's norm-before-out-proj, gated by z)
+    from repro.models.layers import rms_norm
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm_g"]).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out.astype(x.dtype), new_cache

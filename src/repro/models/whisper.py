@@ -1,0 +1,226 @@
+"""Whisper-large-v3 backbone: encoder-decoder transformer.
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed mel-frame embeddings (B, encoder_frames, d_model).  Encoder:
+bidirectional self-attention; decoder: causal self-attention +
+cross-attention to the encoder memory.  Pre-LayerNorm, GELU MLPs, biased
+projections (Whisper convention).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models.params import ParamDef
+
+Params = Dict[str, Any]
+
+
+def _ln(n, cfg, names):
+    t = {}
+    for k in names:
+        t[f"{k}_g"] = ParamDef((n, cfg.d_model), ("layers", None), init="ones")
+        t[f"{k}_b"] = ParamDef((n, cfg.d_model), ("layers", None), init="zeros")
+    return t
+
+
+def _attn(n, cfg, prefix=""):
+    d, hq, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    return {
+        f"{prefix}wq": ParamDef((n, d, hq * hd), ("layers", "fsdp", "model")),
+        f"{prefix}wk": ParamDef((n, d, hq * hd), ("layers", "fsdp", "model")),
+        f"{prefix}wv": ParamDef((n, d, hq * hd), ("layers", "fsdp", "model")),
+        f"{prefix}wo": ParamDef((n, hq * hd, d), ("layers", "model", "fsdp")),
+        f"{prefix}bq": ParamDef((n, hq * hd), ("layers", "model"), init="zeros"),
+        f"{prefix}bv": ParamDef((n, hq * hd), ("layers", "model"), init="zeros"),
+        f"{prefix}bo": ParamDef((n, d), ("layers", None), init="zeros"),
+    }
+
+
+def _mlp(n, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ParamDef((n, d, f), ("layers", "fsdp", "model")),
+        "b1": ParamDef((n, f), ("layers", "model"), init="zeros"),
+        "w2": ParamDef((n, f, d), ("layers", "model", "fsdp")),
+        "b2": ParamDef((n, d), ("layers", None), init="zeros"),
+    }
+
+
+def param_table(cfg: ModelConfig) -> Params:
+    v = cfg.padded_vocab
+    ne, nd = cfg.encoder_layers, cfg.num_layers
+    return {
+        "embed": ParamDef((v, cfg.d_model), (None, "model")),
+        "pos_dec": ParamDef((8192, cfg.d_model), (None, "fsdp")),
+        "pos_enc": ParamDef((cfg.encoder_frames, cfg.d_model), (None, "fsdp")),
+        "enc": {**_attn(ne, cfg), **_mlp(ne, cfg), **_ln(ne, cfg, ["ln1", "ln2"])},
+        "dec": {**_attn(nd, cfg), **_attn(nd, cfg, "x_"), **_mlp(nd, cfg),
+                **_ln(nd, cfg, ["ln1", "lnx", "ln2"])},
+        "enc_norm_g": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "enc_norm_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "final_g": ParamDef((cfg.d_model,), (None,), init="ones"),
+        "final_b": ParamDef((cfg.d_model,), (None,), init="zeros"),
+        "lm_head": ParamDef((cfg.d_model, v), ("fsdp", "model")),
+    }
+
+
+class WhisperCache(NamedTuple):
+    k: jnp.ndarray            # (nd, B, T, H, hd) decoder self-attn
+    v: jnp.ndarray
+    pos: jnp.ndarray          # (nd, B, T)
+    xk: jnp.ndarray           # (nd, B, F, H, hd) cross-attn (fixed)
+    xv: jnp.ndarray
+
+
+def _mha(x, p, cfg, prefix="", kv: Optional[Tuple] = None, causal=True,
+         cache=None, pos_offset=0):
+    """Whisper MHA (no GQA, biased q/v).  kv: override source (cross-attn)."""
+    b, s, _ = x.shape
+    hq, hd = cfg.num_heads, cfg.hd
+    src = kv[0] if kv is not None else x
+    q = (jnp.einsum("bsd,dk->bsk", x, p[f"{prefix}wq"]) + p[f"{prefix}bq"])
+    if kv is not None and len(kv) == 3:      # precomputed k, v (decode cross)
+        k, v = kv[1], kv[2]
+    else:
+        k = jnp.einsum("bsd,dk->bsk", src, p[f"{prefix}wk"])
+        v = (jnp.einsum("bsd,dk->bsk", src, p[f"{prefix}wv"]) + p[f"{prefix}bv"])
+        k = k.reshape(b, -1, hq, hd)
+        v = v.reshape(b, -1, hq, hd)
+    q = q.reshape(b, s, hq, hd)
+    new_cache = None
+    if cache is not None:                    # cached self-attn (prefill/decode)
+        ck, cv, cpos = cache
+        slot = jnp.asarray(pos_offset) % ck.shape[1]
+        pos_blk = (pos_offset + jnp.arange(s, dtype=jnp.int32))[None, :]
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, jnp.broadcast_to(pos_blk, (b, s)), (0, slot))
+        if s == 1:
+            out = L.attention(q, ck, cv, causal=True, q_offset=pos_offset,
+                              kv_positions=cpos)
+        else:  # prefill: attend within the block directly
+            out = L.attention(q, k, v, causal=True, q_offset=0)
+        new_cache = (ck, cv, cpos)
+    else:
+        out = L.attention(q, k, v, causal=causal, q_offset=0)
+    out = out.reshape(b, s, hq * hd)
+    return jnp.einsum("bsk,kd->bsd", out, p[f"{prefix}wo"]) + p[f"{prefix}bo"], new_cache
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, F, D) stubbed conv-frontend output -> encoder memory."""
+    adt = jnp.dtype(cfg.dtype)
+    x = frames.astype(adt) + params["pos_enc"][None].astype(adt)
+    x = shard(x, "batch", None, None)
+    enc = params["enc"]
+
+    def body(h, lp):
+        a, _ = _mha(L.layer_norm(h, lp["ln1_g"], lp["ln1_b"]), lp, cfg,
+                    causal=False)
+        h = h + a
+        m = L.gelu_mlp(L.layer_norm(h, lp["ln2_g"], lp["ln2_b"]),
+                       lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        return h + m, ()
+
+    from repro.models.causal_lm import _unroll_scans
+    if _unroll_scans():
+        bf = jax.checkpoint(body)
+        for li in range(cfg.encoder_layers):
+            x, _ = bf(x, jax.tree.map(lambda a, _li=li: a[_li], enc))
+    else:
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, enc)
+    return L.layer_norm(x, params["enc_norm_g"], params["enc_norm_b"])
+
+
+def decode(params: Params, tokens: jnp.ndarray, memory: jnp.ndarray,
+           cfg: ModelConfig, cache: Optional[WhisperCache] = None,
+           pos_offset=0):
+    """Decoder forward; returns hidden states (and updated cache)."""
+    b, s = tokens.shape
+    pos_ids = pos_offset + jnp.arange(s)
+    adt = jnp.dtype(cfg.dtype)
+    x = (params["embed"].astype(adt)[tokens]
+         + params["pos_dec"].astype(adt)[pos_ids][None])
+    x = shard(x, "batch", None, None)
+    dec = params["dec"]
+
+    def body(h, xs):
+        lp, lc = xs
+        self_cache = (lc[0], lc[1], lc[2]) if lc is not None else None
+        a, new_self = _mha(L.layer_norm(h, lp["ln1_g"], lp["ln1_b"]), lp, cfg,
+                           cache=self_cache, pos_offset=pos_offset)
+        h = h + a
+        if lc is not None:
+            kv = (memory, lc[3], lc[4])
+        else:
+            kv = (memory,)
+        c, _ = _mha(L.layer_norm(h, lp["lnx_g"], lp["lnx_b"]), lp, cfg,
+                    prefix="x_", kv=kv, causal=False)
+        h = h + c
+        m = L.gelu_mlp(L.layer_norm(h, lp["ln2_g"], lp["ln2_b"]),
+                       lp["w1"], lp["b1"], lp["w2"], lp["b2"])
+        new_c = ((new_self[0], new_self[1], new_self[2], lc[3], lc[4])
+                 if lc is not None else None)
+        return h + m, new_c
+
+    from repro.models.causal_lm import _unroll_scans
+    if cache is not None:
+        xs = (dec, (cache.k, cache.v, cache.pos, cache.xk, cache.xv))
+        if _unroll_scans():
+            ncs_list = []
+            for li in range(cfg.num_layers):
+                x, nc = body(x, jax.tree.map(lambda a, _li=li: a[_li], xs))
+                ncs_list.append(nc)
+            ncs = jax.tree.map(lambda *a: jnp.stack(a), *ncs_list)
+        else:
+            x, ncs = jax.lax.scan(body, x, xs)
+        new_cache = WhisperCache(*ncs)
+    else:
+        if _unroll_scans():
+            bf = jax.checkpoint(body)
+            for li in range(cfg.num_layers):
+                x, _ = bf(x, jax.tree.map(lambda a, _li=li: a[_li],
+                                          (dec, None)))
+        else:
+            x, _ = jax.lax.scan(jax.checkpoint(body), x, (dec, None))
+        new_cache = None
+    x = L.layer_norm(x, params["final_g"], params["final_b"])
+    return x, new_cache
+
+
+def init_cache(params: Params, memory: jnp.ndarray, cfg: ModelConfig,
+               max_len: int) -> WhisperCache:
+    """Precompute cross-attention K/V from the encoder memory."""
+    nd = cfg.num_layers
+    b, f, _ = memory.shape
+    hq, hd = cfg.num_heads, cfg.hd
+
+    def one(lp):
+        k = jnp.einsum("bfd,dk->bfk", memory, lp["x_wk"]).reshape(b, f, hq, hd)
+        v = (jnp.einsum("bfd,dk->bfk", memory, lp["x_wv"]) + lp["x_bv"]
+             ).reshape(b, f, hq, hd)
+        return k, v
+
+    xk, xv = jax.vmap(one)(params["dec"])
+    adt = jnp.dtype(cfg.dtype)
+    return WhisperCache(
+        k=jnp.zeros((nd, b, max_len, hq, hd), adt),
+        v=jnp.zeros((nd, b, max_len, hq, hd), adt),
+        pos=jnp.full((nd, b, max_len), 10 ** 9, jnp.int32),
+        xk=xk.astype(adt), xv=xv.astype(adt),
+    )
+
+
+def loss_fn(params: Params, batch: Dict[str, jnp.ndarray],
+            cfg: ModelConfig) -> jnp.ndarray:
+    from repro.models.causal_lm import xent_loss
+    memory = encode(params, batch["frames"], cfg)
+    hidden, _ = decode(params, batch["tokens"], memory, cfg)
+    return xent_loss(params, hidden, batch["labels"], cfg.padded_vocab)

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with KV-cache compression gate.
+
+The paper integration on the serving side: decode-time KV blocks are scored
+with the in-graph q-ent size model; blocks whose predicted CR clears the
+threshold are stored int8-quantized (quantize-dequantize in the cache,
+metering the saved bytes).  This is the runtime analogue of UC2: decide
+*whether and how* to compress without trial-compressing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.grad_compress import quantize_int8, dequantize_int8, predicted_cr_int8
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    kv_compress: bool = False
+    kv_gate_ratio: float = 2.5
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
+        self.cfg, self.params, self.scfg = cfg, params, scfg
+        self._prefill = jax.jit(
+            lambda p, batch: M.prefill(p, batch, cfg, scfg.max_len))
+        self._decode = jax.jit(
+            lambda p, cache, tok, pos: M.decode_step(p, cache, tok, pos, cfg))
+        self.kv_saved_bytes = 0
+        self.kv_total_bytes = 0
+
+    def _maybe_compress_cache(self, cache):
+        """Quantize-dequantize K/V leaves whose predicted CR clears the gate."""
+        if not self.scfg.kv_compress:
+            return cache
+
+        def leaf(x):
+            if x.dtype not in (jnp.bfloat16, jnp.float32) or x.ndim < 4:
+                return x
+            cr = float(predicted_cr_int8(x.astype(jnp.float32)))
+            self.kv_total_bytes += x.size * x.dtype.itemsize
+            if cr >= self.scfg.kv_gate_ratio:
+                codes, scales = quantize_int8(x.astype(jnp.float32))
+                self.kv_saved_bytes += int(
+                    x.size * x.dtype.itemsize - (codes.size + scales.size * 4))
+                return dequantize_int8(codes, scales, x.shape, x.dtype)
+            return x
+
+        return jax.tree.map(leaf, cache)
+
+    def generate(self, batch: Dict[str, jnp.ndarray], steps: int,
+                 greedy: bool = True) -> jnp.ndarray:
+        """Prefill then decode ``steps`` tokens; returns (B, steps) ids."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        logits, cache = self._prefill(self.params, batch)
+        cache = self._maybe_compress_cache(cache)
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        for i in range(steps):
+            out.append(tok[:, 0])
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(s + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,114 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import gaussian, scientific
+
+SHAPES_2D = [(128, 128), (256, 384), (300, 500), (96, 96)]
+
+
+@pytest.fixture(scope="module")
+def field():
+    return scientific.field_slices("miranda-vx", count=1, n=384)[0]
+
+
+# ---------------------------------------------------------------------- gram
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gram_matches_ref(shape, dtype, field):
+    from repro.kernels.gram import ops, ref
+    x = field[: shape[0], : shape[1]].astype(dtype)
+    got = ops.gram(x, transpose=True)
+    want = ref.gram_xtx(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-3)
+
+
+def test_gram_xxt(field):
+    from repro.kernels.gram import ops, ref
+    x = field[:100, :300]
+    np.testing.assert_allclose(np.asarray(ops.gram(x, transpose=False)),
+                               np.asarray(ref.gram_xxt(x)), rtol=2e-5, atol=2e-3)
+
+
+# ---------------------------------------------------------------------- qent
+@pytest.mark.parametrize("n", [2048, 4096, 5000, 65536])
+@pytest.mark.parametrize("eps", [1e-3, 1e-2])
+def test_qent_matches_ref(n, eps, field):
+    from repro.kernels.qent import ops, ref
+    x = field.reshape(-1)[:n]
+    got = float(ops.quantized_entropy(x, eps))
+    want = float(ref.quantized_entropy(x, eps))
+    assert abs(got - want) < 1e-4, (got, want)
+
+
+def test_qent_matches_exact_entropy(field):
+    """When the code range fits the bins, hashing is injective -> exact."""
+    from repro.kernels.qent import ops
+    x = field[:128, :128]
+    eps = 5e-3 * float(jnp.max(x) - jnp.min(x))
+    codes = np.floor(np.asarray(x).reshape(-1) / eps).astype(np.int64)
+    _, counts = np.unique(codes, return_counts=True)
+    p = counts / counts.sum()
+    expect = float(-(p * np.log2(p)).sum())
+    got = float(ops.quantized_entropy(x, eps))
+    assert abs(got - expect) < 1e-4
+
+
+# ------------------------------------------------------------------- lorenzo
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("eps", [1e-4, 1e-2])
+def test_lorenzo_matches_ref(shape, eps, field):
+    from repro.kernels.lorenzo import ops, ref
+    x = field[: shape[0], : shape[1]]
+    got = ops.lorenzo2d(x, eps)
+    want = ref.lorenzo2d(x, eps)
+    assert bool(jnp.all(got == want))
+
+
+def test_lorenzo_decodes_within_bound(field):
+    from repro.kernels.lorenzo import ops, ref
+    from repro.compressors.base import error_bound_slack
+    x = field[:256, :256]
+    eps = 1e-3
+    codes = ops.lorenzo2d(x, eps)
+    recon = ref.lorenzo_decode(codes, eps)
+    assert float(jnp.max(jnp.abs(recon - x))) <= eps + error_bound_slack(x)
+
+
+# ----------------------------------------------------------------- zfp_block
+@pytest.mark.parametrize("shape", [(128, 128), (256, 384), (100, 200)])
+def test_zfp_block_matches_ref(shape, field):
+    from repro.kernels.zfp_block import ops, ref
+    x = field[: shape[0], : shape[1]]
+    coef_k, exp_k = ops.zfp_forward2d(x)
+    coef_r, exp_r = ref.zfp_forward2d(x)
+    assert coef_k.shape == coef_r.shape
+    assert bool(jnp.all(coef_k == coef_r))
+    assert bool(jnp.all(exp_k == exp_r))
+
+
+def test_zfp_lift_roundtrip_error_small():
+    """zfp's integer lifting is lossy in the low bits *by design*; the
+    round-trip error must stay within a few integer LSBs."""
+    from repro.compressors.zfp import fwd_lift4, inv_lift4
+    k = jax.random.PRNGKey(0)
+    v = jax.random.randint(k, (512, 4, 4), -2 ** 24, 2 ** 24, dtype=jnp.int32)
+    w = v
+    for ax in (1, 2):
+        w = fwd_lift4(w, ax)
+    for ax in (2, 1):
+        w = inv_lift4(w, ax)
+    assert int(jnp.max(jnp.abs(w - v))) <= 16   # few LSBs of 2^24-scale ints
+
+
+# -------------------------------------------------------- predictor routing
+def test_predictors_use_kernels_consistent(field):
+    from repro.core import predictors as P
+    x = field[:256, :256]
+    f0 = P.features_2d(x, 1e-3, P.PredictorConfig(use_kernels=False, qent_bins=4096))
+    f1 = P.features_2d(x, 1e-3, P.PredictorConfig(use_kernels=True, qent_bins=4096))
+    np.testing.assert_allclose(np.asarray(f0), np.asarray(f1), rtol=1e-4, atol=1e-4)

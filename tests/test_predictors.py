@@ -1,0 +1,86 @@
+"""Unit + property tests for the paper's statistical predictors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import predictors as P
+from repro.data import gaussian
+
+
+def test_svd_trunc_low_rank_vs_noise():
+    """Rank-1 fields need ~1 singular value; white noise needs many."""
+    key = jax.random.PRNGKey(0)
+    u = jax.random.normal(key, (64, 1))
+    lowrank = u @ u.T
+    noise = jax.random.normal(key, (64, 64))
+    t_low = float(P.svd_trunc(lowrank))
+    t_noise = float(P.svd_trunc(noise))
+    assert t_low <= 2 / 64 + 1e-6
+    assert t_noise > 0.5
+
+
+def test_svd_trunc_matches_full_svd():
+    """Gram-eigh path must agree with an explicit SVD computation."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (40, 30))
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    s = jnp.linalg.svd(xc, compute_uv=False)
+    s2 = s ** 2
+    cum = jnp.cumsum(s2) / jnp.sum(s2)
+    needed = int(1 + jnp.sum(cum < 0.99))
+    expect = needed / 30
+    assert abs(float(P.svd_trunc(x)) - expect) < 1e-5
+
+
+def test_correlated_field_lower_trunc():
+    """Stronger spatial correlation => lower svd_trunc (paper Fig. 4)."""
+    k = jax.random.PRNGKey(2)
+    smooth = gaussian.grf_sample(k, 128, 32.0)
+    rough = gaussian.grf_sample(k, 128, 2.0)
+    assert float(P.svd_trunc(smooth)) < float(P.svd_trunc(rough))
+
+
+def test_quantized_entropy_eps_monotone():
+    """Larger error bound destroys more information => lower q-ent."""
+    k = jax.random.PRNGKey(3)
+    x = gaussian.grf_sample(k, 128, 8.0)
+    ents = [float(P.quantized_entropy(x, e)) for e in (1e-4, 1e-3, 1e-2, 1e-1)]
+    assert all(a >= b - 1e-6 for a, b in zip(ents, ents[1:])), ents
+
+
+def test_quantized_entropy_exact_small_range():
+    """Histogram path equals a direct numpy entropy when codes fit bins."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(1000,)).astype(np.float32)
+    eps = 0.1
+    codes = np.floor(x / eps).astype(np.int64)
+    _, counts = np.unique(codes, return_counts=True)
+    p = counts / counts.sum()
+    expect = -(p * np.log2(p)).sum()
+    got = float(P.quantized_entropy(jnp.asarray(x), eps))
+    assert abs(got - expect) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(min_value=1e-4, max_value=1.0),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_qent_nonnegative_and_bounded(eps, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 32))
+    h = float(P.quantized_entropy(x, eps))
+    assert 0.0 <= h <= np.log2(32 * 32) + 1e-5
+
+
+def test_hosvd_trunc_3d():
+    k = jax.random.PRNGKey(4)
+    smooth = jnp.broadcast_to(gaussian.grf_sample(k, 32, 16.0), (8, 32, 32))
+    noise = jax.random.normal(k, (8, 32, 32))
+    assert float(P.hosvd_trunc(smooth)) < float(P.hosvd_trunc(noise))
+
+
+def test_features_finite_on_constant_slice():
+    """Degenerate inputs (sigma=0, qent=0) must not produce inf/nan."""
+    x = jnp.ones((64, 64))
+    f = P.features_2d(x, 1e-3)
+    assert bool(jnp.all(jnp.isfinite(f)))

@@ -1,0 +1,84 @@
+"""Regression-model tests: JAX solvers vs scipy references + recovery of
+known ground-truth relationships."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import regression as R
+
+
+def _synthetic(n=200, seed=0, noise=0.02):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=(n, 2))
+    # log(CR) = 1.0 + 0.5 z1 - 0.8 z2 + 0.3 z1 z2
+    y = 1.0 + 0.5 * f[:, 0] - 0.8 * f[:, 1] + 0.3 * f[:, 0] * f[:, 1]
+    y = y + noise * rng.normal(size=n)
+    return jnp.asarray(f), jnp.asarray(np.exp(y))
+
+
+def test_linear_recovers_coefficients():
+    f, cr = _synthetic()
+    m = R.LinearCRModel.fit(f, cr)
+    # predictors are standardized; on standard-normal features the
+    # coefficients should be recovered nearly exactly
+    pred = m.predict(f)
+    rel = np.abs(np.log(np.asarray(pred)) - np.log(np.asarray(cr)))
+    assert float(np.median(rel)) < 0.05
+
+
+def test_linear_matches_lstsq():
+    f, cr = _synthetic(noise=0.1, seed=1)
+    m = R.LinearCRModel.fit(f, cr, ridge=0.0)
+    z = np.asarray(m.std(f))
+    X = np.column_stack([np.ones(len(z)), z, z[:, 0] * z[:, 1]])
+    ref, *_ = np.linalg.lstsq(X, np.log(np.asarray(cr)), rcond=None)
+    np.testing.assert_allclose(np.asarray(m.coef), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_spline_fits_nonlinear():
+    rng = np.random.default_rng(2)
+    f = rng.normal(size=(300, 2))
+    y = np.sin(f[:, 0]) + 0.2 * f[:, 1] ** 2
+    cr = jnp.asarray(np.exp(y))
+    lin = R.LinearCRModel.fit(jnp.asarray(f), cr)
+    spl = R.SplineCRModel.fit(jnp.asarray(f), cr)
+    err_lin = float(np.mean((np.log(np.asarray(lin.predict(jnp.asarray(f)))) - y) ** 2))
+    err_spl = float(np.mean((np.log(np.asarray(spl.predict(jnp.asarray(f)))) - y) ** 2))
+    assert err_spl < err_lin * 0.7, (err_spl, err_lin)
+
+
+def test_ncs_basis_properties():
+    """Natural cubic spline basis: linear beyond boundary knots."""
+    knots = jnp.asarray([-1.0, 0.0, 1.0])
+    x = jnp.asarray([-5.0, -4.0, 4.0, 5.0])
+    b = R.ncs_basis(x, knots)
+    # second differences of each basis function vanish outside the knots
+    left = b[1] - b[0]
+    right = b[3] - b[2]
+    # linearity: f(-4) - f(-5) == f'(x) * 1 constant slope on each side
+    b_mid = R.ncs_basis(jnp.asarray([-4.5, 4.5]), knots)
+    np.testing.assert_allclose(np.asarray(b[0] + left * 0.5), np.asarray(b_mid[0]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(b[2] + right * 0.5), np.asarray(b_mid[1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lasso_selects_true_predictors():
+    rng = np.random.default_rng(3)
+    f = rng.normal(size=(150, 2))
+    y = 2.0 + 1.0 * f[:, 0] + 0.0 * f[:, 1]          # z2 irrelevant
+    cr = jnp.asarray(np.exp(y + 0.01 * rng.normal(size=150)))
+    imp = np.asarray(R.lasso_importance(jnp.asarray(f), cr, k=5))
+    assert imp[0] > 5 * max(imp[1], 1e-6), imp       # q-ent analog dominates
+
+
+def test_lasso_fista_matches_ridgeless_ls_at_zero_lambda():
+    f, cr = _synthetic(seed=4)
+    std = R.Standardizer.fit(f)
+    X = np.asarray(R._linear_design(std(f)))
+    y = np.log(np.asarray(cr))
+    yz = (y - y.mean()) / y.std()
+    b = np.asarray(R.lasso_fit(jnp.asarray(X), jnp.asarray(yz),
+                               jnp.asarray(0.0), num_iters=4000))
+    ref, *_ = np.linalg.lstsq(X, yz, rcond=None)
+    np.testing.assert_allclose(b, ref, atol=2e-3)

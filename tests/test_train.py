@@ -1,0 +1,163 @@
+"""Training substrate tests: convergence, gradient compression with error
+feedback, checkpoint/restart determinism, lossy checkpoints, fault
+recovery."""
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke
+from repro.ckpt import checkpoint as CKPT
+from repro.data.tokens import make_data_iter
+from repro.train import grad_compress as GC
+from repro.train import loop as LOOP
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+CFG = get_smoke("granite-3-2b")
+KEY = jax.random.PRNGKey(0)
+
+
+def _step(compress=None, microbatches=1, lr=3e-3):
+    return jax.jit(TS.make_train_step(
+        CFG, OPT.AdamWConfig(lr=lr, warmup_steps=10),
+        microbatches=microbatches, compress=compress))
+
+
+def test_loss_decreases():
+    state = TS.init_state(CFG, KEY)
+    step = _step()
+    it = make_data_iter(CFG, batch=8, seq=64)
+    first = last = None
+    for i in range(30):
+        state, m = step(state, it(i % 4))  # few batches -> memorizable
+        if first is None:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 0.3, (first, last)
+
+
+def test_microbatching_matches_full_batch():
+    """Grad accumulation must equal the single big batch (linearity)."""
+    state = TS.init_state(CFG, KEY)
+    it = make_data_iter(CFG, batch=8, seq=32)
+    batch = it(0)
+    s1, m1 = _step(microbatches=1)(state, batch)
+    s4, m4 = _step(microbatches=4)(state, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-4)
+    l1 = jax.tree.leaves(s1.params)[0].astype(jnp.float32)
+    l4 = jax.tree.leaves(s4.params)[0].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l4),
+                               rtol=2e-2, atol=2e-4)
+
+
+def test_compressed_training_converges():
+    """int8 + error feedback training tracks uncompressed training."""
+    it = make_data_iter(CFG, batch=8, seq=64)
+
+    def run(compress):
+        state = TS.init_state(CFG, KEY, compress=compress is not None)
+        step = _step(compress=compress)
+        for i in range(25):
+            state, m = step(state, it(i % 4))
+        return float(m["loss"])
+
+    plain = run(None)
+    comp = run(GC.CompressConfig(enabled=True, gate_ratio=0.0))
+    assert abs(comp - plain) < 0.5, (plain, comp)
+
+
+def test_int8_roundtrip_error_small():
+    g = jax.random.normal(KEY, (4096,)) * 0.01
+    codes, scales = GC.quantize_int8(g)
+    deq = GC.dequantize_int8(codes, scales, g.shape)
+    # block-wise int8: relative error ~ 1/127 of the block max
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(jnp.max(jnp.abs(g))) / 100
+
+
+def test_predicted_cr_gate_sane():
+    sparse = jnp.zeros((8192,)).at[::64].set(1.0)   # very compressible
+    dense = jax.random.normal(KEY, (8192,))
+    cr_sparse = float(GC.predicted_cr_int8(sparse))
+    cr_dense = float(GC.predicted_cr_int8(dense))
+    assert cr_sparse > cr_dense
+    assert cr_dense >= 3.5                           # int8 alone gives ~4x
+
+
+def test_checkpoint_restart_bitwise():
+    d = tempfile.mkdtemp()
+    try:
+        it = make_data_iter(CFG, batch=4, seq=32)
+        step = _step()
+        lc = LOOP.LoopConfig(total_steps=8, ckpt_every=4, ckpt_dir=d)
+        s0 = TS.init_state(CFG, KEY)
+        sA, resA = LOOP.run(CFG, s0, step, it, lc)
+        # restart from step 4 (fresh state object) and continue to 8
+        shutil.rmtree(f"{d}/step_00000008")
+        lcB = LOOP.LoopConfig(total_steps=8, ckpt_every=4, ckpt_dir=d)
+        sB, resB = LOOP.run(CFG, TS.init_state(CFG, KEY), step, it, lcB)
+        a = jax.tree.leaves(sA.params)[0].astype(jnp.float32)
+        b = jax.tree.leaves(sB.params)[0].astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_failure_recovery_completes():
+    d = tempfile.mkdtemp()
+    try:
+        it = make_data_iter(CFG, batch=4, seq=32)
+        step = _step()
+        lc = LOOP.LoopConfig(total_steps=10, ckpt_every=3, ckpt_dir=d,
+                             failure_prob=0.2, failure_seed=5)
+        mk = lambda: TS.init_state(CFG, KEY)
+        state, res = LOOP.run_with_recovery(CFG, mk, step, it, lc)
+        assert res.restarts >= 1
+        assert 9 in res.losses                  # reached the final step
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_lossy_checkpoint_policy():
+    d = tempfile.mkdtemp()
+    try:
+        state = TS.init_state(CFG, KEY)
+        pol = CKPT.LossyPolicy(enabled=True, rel_eb=1e-4, min_size=4096)
+        man = CKPT.save(d, 0, state.params, pol)
+        lossy = [k for k, t in man["tensors"].items() if t["codec"] != "raw"]
+        raw = [k for k, t in man["tensors"].items() if t["codec"] == "raw"]
+        assert lossy and raw                     # policy splits by size
+        restored = CKPT.load(d, 0, state.params)
+        for k, t in man["tensors"].items():
+            if t["codec"] != "raw":
+                assert t["achieved_cr"] > 1.0
+        # error bounded by rel_eb * range per tensor
+        flat_o = CKPT._leaf_paths(state.params)
+        flat_r = CKPT._leaf_paths(restored)
+        for k in lossy:
+            o = np.asarray(flat_o[k], np.float32)
+            r = np.asarray(flat_r[k], np.float32)
+            rng = o.max() - o.min()
+            # rel_eb bound + bf16 re-cast ulp (bf16 params stored via f32)
+            slack = 1.1e-4 * rng + np.max(np.abs(o)) * 2.0 ** -8
+            assert np.max(np.abs(o - r)) <= slack, k
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_async_checkpointer():
+    d = tempfile.mkdtemp()
+    try:
+        state = TS.init_state(CFG, KEY)
+        ck = CKPT.AsyncCheckpointer(d)
+        ck.submit(1, state.params)
+        ck.wait()
+        ck.close()
+        assert CKPT.latest_step(d) == 1
+    finally:
+        shutil.rmtree(d, ignore_errors=True)

@@ -1,0 +1,65 @@
+"""UC1 (target-CR search) and UC2 (best-compressor selection) tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import compressors as C
+from repro.core import pipeline as PL, usecases as UC
+from repro.data import scientific
+
+
+@pytest.fixture(scope="module")
+def setup():
+    slices = scientific.field_slices("scale-u", count=18, n=128)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    ebs = [1e-5 * rng, 1e-4 * rng, 1e-3 * rng, 1e-2 * rng]
+    return slices, ebs, rng
+
+
+def test_uc1_finds_error_bound(setup):
+    slices, ebs, rng = setup
+    gm = UC.EbGridModel.train(slices[:14], "sz2", ebs)
+    test = slices[16]
+    target = 6.0
+    eps, pred_cr = UC.find_error_bound_for_cr(gm, test, target)
+    true_cr = C.get("sz2").cr(test, eps)
+    assert abs(true_cr - target) / target < 0.30, (eps, pred_cr, true_cr)
+
+
+def test_uc1_fewer_compressor_runs_than_exhaustive(setup):
+    slices, ebs, rng = setup
+    test = slices[16]
+    _, _, runs = UC.find_error_bound_exhaustive(
+        "sz2", test, 6.0, ebs[0], ebs[-1])
+    # the model-driven path runs the compressor 0 times at query time
+    assert runs >= 4
+
+
+def test_uc2_ranks_best_compressor(setup):
+    slices, ebs, rng = setup
+    eps = ebs[2]
+    names = ["sz2", "zfp", "mgard", "bitgrooming"]
+    models = {}
+    for n in names:
+        comp = C.get(n)
+        crs = jnp.asarray([comp.cr(s, eps) for s in slices[:14]])
+        models[n] = PL.CRPredictor.train(slices[:14], crs, eps)
+    agree = 0
+    for i in (14, 15, 16, 17):
+        best_pred, preds = UC.best_compressor(models, slices[i], eps)
+        best_true, crs = UC.best_compressor_exhaustive(names, slices[i], eps)
+        # predicted winner achieves >= 90% of the true best CR
+        if crs[best_pred] >= 0.9 * crs[best_true]:
+            agree += 1
+    assert agree >= 3, agree
+
+
+def test_ebgrid_monotone_interpolation(setup):
+    slices, ebs, rng = setup
+    gm = UC.EbGridModel.train(slices[:14], "zfp", ebs)
+    test = slices[16]
+    crs = [gm.predict(test, e) for e in
+           np.logspace(np.log10(ebs[0]), np.log10(ebs[-1]), 9)]
+    # CR(eps) should be (weakly) increasing along the eb sweep
+    violations = sum(1 for a, b in zip(crs, crs[1:]) if b < a * 0.95)
+    assert violations <= 1, crs
