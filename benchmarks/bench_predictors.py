@@ -43,6 +43,17 @@ def main() -> dict:
                 f"full_svd_us={t_full:.0f} gram_eigh_us={t_gram:.0f} "
                 f"gram_pallas_us={t_gram_k:.0f} "
                 f"speedup_vs_full={t_full / t_gram:.1f}x")
+
+    # Sweep engine: full (slices x error-bounds) predictor tensor in one
+    # pass (see bench_sweep.py for the looped-baseline comparison)
+    ebs = jnp.asarray([r * rng for r in (1e-4, 1e-3, 1e-2, 1e-1)])
+    t_sweep = common.timeit(
+        lambda: P.features_sweep(slices, ebs), warmup=1, iters=3)
+    out["sweep_us"] = {"k": int(slices.shape[0]), "e": int(ebs.shape[0]),
+                       "features_sweep": t_sweep}
+    common.emit("fig4/sweep", t_sweep,
+                f"k={slices.shape[0]} e={ebs.shape[0]} "
+                f"us_per_pair={t_sweep / (slices.shape[0] * ebs.shape[0]):.0f}")
     common.save_json("fig4_predictors", out)
     return out
 

@@ -9,13 +9,27 @@ from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
-import zstandard
 
-_CCTX = zstandard.ZstdCompressor(level=3)
+try:
+    import zstandard
+
+    HAVE_ZSTD = True
+    _CCTX = zstandard.ZstdCompressor(level=3)
+
+    def _compress(payload: bytes) -> bytes:
+        return _CCTX.compress(payload)
+except ImportError:  # minimal environments: stdlib DEFLATE stands in
+    import zlib
+
+    HAVE_ZSTD = False
+
+    def _compress(payload: bytes) -> bytes:
+        return zlib.compress(payload, 6)
 
 
 def zstd_bytes(payload: bytes) -> int:
-    return len(_CCTX.compress(payload))
+    """Entropy-coded byte count (zstd when installed, else zlib)."""
+    return len(_compress(payload))
 
 
 def pack_codes(codes: np.ndarray) -> tuple[bytes, int]:

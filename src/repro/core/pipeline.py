@@ -44,8 +44,22 @@ def featurize_slices(
     eps: float,
     cfg: P.PredictorConfig = P.PredictorConfig(),
 ) -> jnp.ndarray:
-    """(k, m, n) stack of 2-D slices -> (k, 2) predictor matrix."""
-    return P.features_batch(slices, eps, cfg)
+    """(k, m, n) stack of 2-D slices -> (k, 2) predictor matrix.
+
+    Routed through the batched sweep engine (single-eb column): one
+    batched Gram + eigvalsh for all k slices instead of k separate solves.
+    """
+    return P.get_engine(cfg).features(slices, eps)
+
+
+def featurize_sweep(
+    slices: jnp.ndarray,
+    epss,
+    cfg: P.PredictorConfig = P.PredictorConfig(),
+) -> jnp.ndarray:
+    """(k, m, n) stack x (e,) error bounds -> (k, e, 2) predictor tensor
+    in one pass over the data (see ``predictors.FeaturizationEngine``)."""
+    return P.get_engine(cfg).sweep(slices, epss)
 
 
 def kfold_evaluate(
@@ -116,6 +130,19 @@ class CRPredictor:
             feats = featurize_slices(slices, eps, cfg)
         else:
             feats = jnp.stack([P.features_3d(s, eps, cfg) for s in slices])
+        return CRPredictor.train_from_features(feats, cr, eps, model, cfg, ndim)
+
+    @staticmethod
+    def train_from_features(
+        feats: jnp.ndarray,
+        cr: jnp.ndarray,
+        eps: float,
+        model: str = "spline",
+        cfg: P.PredictorConfig = P.PredictorConfig(),
+        ndim: int = 2,
+    ) -> "CRPredictor":
+        """Fit from a precomputed (k, 2) feature matrix -- the sweep-native
+        training path (featurize the whole eb grid once, fit per eb)."""
         m = R.MODEL_REGISTRY[model](feats, jnp.asarray(cr))
         return CRPredictor(m, eps, cfg, ndim)
 

@@ -32,6 +32,7 @@ class EbGridModel:
     ebs: np.ndarray                       # ascending error-bound grid
     models: list                          # CRPredictor per eb
     name: str = ""
+    cfg: P.PredictorConfig = dataclasses.field(default_factory=P.PredictorConfig)
 
     @staticmethod
     def train(
@@ -39,23 +40,30 @@ class EbGridModel:
         compressor: str,
         ebs: Sequence[float],
         model: str = "spline",
+        cfg: P.PredictorConfig = P.PredictorConfig(),
     ) -> "EbGridModel":
         comp = C.get(compressor)
+        # ONE fused sweep featurizes every (slice, grid-eb) pair: the SVD
+        # runs once per slice and each slice is read once for all ebs,
+        # instead of the old per-eb re-featurization.
+        feats = P.get_engine(cfg).sweep(slices, np.asarray(ebs, np.float64))
         models = []
-        for eps in ebs:
+        for i, eps in enumerate(ebs):
             crs = jnp.asarray([comp.cr(s, float(eps)) for s in slices])
-            models.append(PL.CRPredictor.train(slices, crs, float(eps), model))
-        return EbGridModel(np.asarray(ebs, np.float64), models, compressor)
+            models.append(PL.CRPredictor.train_from_features(
+                feats[:, i, :], crs, float(eps), model, cfg))
+        return EbGridModel(np.asarray(ebs, np.float64), models, compressor, cfg)
 
     def predict(self, data: jnp.ndarray, eps: float,
                 feat_cache=None) -> float:
         """Predicted CR for one slice at an arbitrary eb (log-interp).
 
-        ``feat_cache``: the closure from ``predictors.features_2d_cached``;
-        reuses the eps-independent SVD/sigma across the whole sweep (the
-        paper's UC1 cost structure)."""
+        ``feat_cache``: a ``predictors.SliceCache`` (or any callable
+        eps -> (2,)); reuses the eps-independent SVD/sigma across the
+        whole sweep (the paper's UC1 cost structure)."""
         if feat_cache is None:
-            feat_cache = P.features_2d_cached(data)
+            # featurize under the SAME config the models were trained with
+            feat_cache = P.get_engine(self.cfg).cached(data)
         le = np.log(eps)
         lg = np.log(self.ebs)
         if le <= lg[0]:
@@ -89,17 +97,11 @@ def find_error_bound_for_cr(
     Returns (eps, predicted_cr).  CR(eps) is monotone nondecreasing, so
     bisection converges; the model evaluation replaces compressor runs.
     """
-    from repro.core import predictors as _P
-    raw_cache = _P.features_2d_cached(data)
-    memo: dict = {}
-
-    def feat_cache(eps):
-        # bisection only ever evaluates features at the model-grid ebs, so
-        # q-ent runs at most len(ebs) times for the whole search
-        k = float(eps)
-        if k not in memo:
-            memo[k] = raw_cache(eps)
-        return memo[k]
+    # Bisection only ever evaluates features at the model-grid ebs, so ONE
+    # fused sweep up front covers every probe: SVD once, the slice read
+    # once, all grid q-ents from a single kernel launch.
+    feat_cache = P.get_engine(grid_model.cfg).cached(data)
+    feat_cache.prefetch(grid_model.ebs)
 
     lo, hi = float(grid_model.ebs[0]), float(grid_model.ebs[-1])
     cr_lo = grid_model.predict(data, lo, feat_cache)
@@ -161,10 +163,13 @@ def best_compressor(
 
     ``models``: name -> trained CRPredictor at this eps.  The expensive
     featurization (SVD + q-ent) is shared across compressors -- computed
-    once, fed to every model (the paper's key UC2 cost structure).
+    once by the engine, fed to every model (the paper's key UC2 cost
+    structure).
     """
     from repro.core.regression import predict_fast
-    feats = P.features_2d_cached(data)(eps)[None]
+    # featurize under the config the models were trained with
+    cfg = next(iter(models.values())).cfg if models else None
+    feats = P.get_engine(cfg).features(data[None], eps)
     preds = {name: float(predict_fast(m.model, feats)[0])
              for name, m in models.items()}
     return max(preds, key=preds.get), preds

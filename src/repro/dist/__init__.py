@@ -1,0 +1,9 @@
+"""Distribution layer: logical-axis sharding, compressed collectives,
+elastic fault handling.
+
+Importing this package installs compatibility polyfills for older jax
+releases (``jax.shard_map`` as a thin adapter over
+``jax.experimental.shard_map``) so the call sites can use the modern
+spelling unconditionally.
+"""
+from repro.dist import sharding  # noqa: F401  (installs jax compat shims)

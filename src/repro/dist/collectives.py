@@ -1,0 +1,38 @@
+"""Compressed cross-pod collectives.
+
+Cross-pod links are the scarcest bandwidth in a multi-pod job, so the pod
+gradient sync ships int8 blocks (amax-scaled along the last axis) instead
+of f32: a 4x wire-byte reduction for <1% relative error on gradient-scale
+tensors.  Used inside ``shard_map`` bodies that are manual over "pod".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray):
+    """Per-row symmetric int8 quantization along the last axis."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_pod_allreduce(x: jnp.ndarray, axis_name: str = "pod") -> jnp.ndarray:
+    """Mean of ``x`` across ``axis_name`` via an int8 all-gather.
+
+    Quantize locally, all-gather the int8 payload + f32 scales (the only
+    cross-pod transfer), dequantize and average on the receiver.  Must be
+    called inside a shard_map manual over ``axis_name``.
+    """
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)
+    ss = jax.lax.all_gather(scale, axis_name)
+    mean = jnp.mean(dequantize_int8(qs, ss), axis=0)
+    return mean.astype(x.dtype)

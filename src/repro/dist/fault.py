@@ -1,0 +1,34 @@
+"""Elastic re-meshing: move a (possibly sharded) state tree onto a new
+mesh, e.g. after shrinking an axis when a slice of devices is lost.
+
+``remesh_state`` is layout-preserving in value: every leaf is device_put
+onto the sharding its logical axes imply on the target mesh (gathering /
+re-slicing as needed).  ``shrink_mesh`` drops trailing device slices along
+one mesh axis.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.dist import sharding as S
+
+
+def remesh_state(tree, axes, mesh: Mesh):
+    """Place every leaf of ``tree`` on ``mesh`` per its logical ``axes``.
+
+    ``axes`` mirrors ``tree``'s structure with a tuple of logical axis
+    names where ``tree`` has an array (``params.logical_axes`` output).
+    """
+    def place(a, ax):
+        return jax.device_put(a, S.named_sharding(a.shape, ax, mesh))
+    return jax.tree.map(place, tree, axes)
+
+
+def shrink_mesh(mesh: Mesh, axis: str, new_size: int) -> Mesh:
+    """A mesh with ``axis`` reduced to its first ``new_size`` slices."""
+    i = mesh.axis_names.index(axis)
+    assert 1 <= new_size <= mesh.devices.shape[i], (axis, new_size)
+    devs = np.take(mesh.devices, np.arange(new_size), axis=i)
+    return Mesh(devs, mesh.axis_names)

@@ -1,0 +1,203 @@
+"""Logical-axis sharding: a thin helper layer over ``jax.sharding``.
+
+Models annotate arrays with *logical* axis names ("batch", "model",
+"fsdp", ...).  A rules table maps logical names to physical mesh axes; the
+helpers here resolve those rules against the active mesh, with a
+per-dimension divisibility fallback to replication (a 25-head tensor on a
+4-way model axis silently replicates instead of erroring).
+
+Also hosts the jax version-compat shims for APIs the call sites use
+unconditionally (``shard_map`` with ``axis_names``, ``pvary``,
+abstract-mesh lookup).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis name -> tuple of physical mesh axes.  A logical axis maps to
+# nothing ("layers": the scan dimension) or to one mesh axis; multi-axis
+# mappings are supported for meshes that split e.g. data across pods.
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "fsdp": ("data",),
+    "model": ("model",),
+    "seq_model": ("model",),
+    "layers": (),
+}
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_STATE, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate ``mesh`` (and optional rule overrides) for the block.
+
+    Enters the jax mesh context too, so ``with_sharding_constraint`` with
+    bare PartitionSpecs resolves inside jit.
+    """
+    prev = (current_mesh(), current_rules())
+    _STATE.mesh = mesh
+    _STATE.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def _mesh_extent(mesh: Mesh, axes) -> int:
+    """Product of the mesh sizes of ``axes`` (missing axes count as 1)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ext = 1
+    for a in axes:
+        ext *= sizes.get(a, 1)
+    return ext
+
+
+def _physical_axes(logical: Optional[str], mesh: Mesh) -> Tuple[str, ...]:
+    if logical is None:
+        return ()
+    axes = current_rules().get(logical, ())
+    if isinstance(axes, str):
+        axes = (axes,)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def spec_for(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for ``shape`` under the logical->physical rules.
+
+    Any dimension whose size does not divide the mapped mesh extent falls
+    back to replication (None) for that dimension only.
+    """
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return P(*([None] * len(shape)))
+    parts = []
+    for dim, name in zip(shape, logical_axes):
+        axes = _physical_axes(name, mesh)
+        ext = _mesh_extent(mesh, axes)
+        if axes and ext > 1 and dim % ext == 0:
+            parts.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def named_sharding(shape: Sequence[int], logical_axes, mesh: Optional[Mesh] = None
+                   ) -> NamedSharding:
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        raise ValueError("named_sharding needs a mesh (arg or use_mesh)")
+    return NamedSharding(mesh, spec_for(shape, logical_axes, mesh))
+
+
+def shard(x, *logical_axes):
+    """Constrain ``x`` to the sharding implied by its logical axes; no-op
+    when no mesh is active (single-host tests, CPU smoke runs) or while
+    tracing inside a compat full-manual shard_map body (old jax cannot
+    express auto-axis constraints there)."""
+    mesh = current_mesh()
+    if mesh is None or getattr(_STATE, "manual_depth", 0) > 0:
+        return x
+    spec = spec_for(x.shape, logical_axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# jax version-compat shims
+# ---------------------------------------------------------------------------
+
+def pvary_manual(tree):
+    """Mark ``tree`` as varying over the currently-manual shard_map axes.
+
+    On jax releases with the vma type system this applies ``jax.lax.pvary``
+    so scan carries type-check; older releases have no pvary (and our
+    shard_map adapter disables replication checking), so identity is
+    exactly equivalent there.
+    """
+    pvary = getattr(jax.lax, "pvary", None)
+    if pvary is None:
+        return tree
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        manual = tuple(n for n in am.axis_names
+                       if str(am._axis_types_dict.get(n, "")) == "Manual")
+    except Exception:
+        manual = ()
+    if not manual:
+        return tree
+    return jax.tree.map(lambda a: pvary(a, manual), tree)
+
+
+# The native jax.shard_map at import time (None on old jax, where the
+# polyfill below installs an adapter -- keep the original to avoid
+# dispatching the adapter to itself).
+_NATIVE_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=frozenset()):
+    """Modern ``jax.shard_map`` spelling (manual over ``axis_names``, auto
+    over the rest) adapted to ``jax.experimental.shard_map`` on old jax.
+
+    Old-jax note: the partial-auto mode (``auto=``) crashes the 0.4.x SPMD
+    partitioner, so the adapter runs the body FULL-manual over every mesh
+    axis with replication checking off.  Axes the caller wanted auto are
+    simply unsharded inside the body (redundant compute, identical
+    values), and ``shard()`` constraints inside the body become no-ops via
+    the manual-depth flag.
+    """
+    if _NATIVE_SHARD_MAP is not None:
+        return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs,
+                                 axis_names=frozenset(axis_names))
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def body(*args):
+        _STATE.manual_depth = getattr(_STATE, "manual_depth", 0) + 1
+        try:
+            return f(*args)
+        finally:
+            _STATE.manual_depth -= 1
+
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def abstract_mesh_or(mesh: Optional[Mesh] = None):
+    """The tracing-time abstract mesh when available, else the concrete
+    mesh (old jax builds NamedShardings from concrete meshes only)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        am = get()
+        if am is not None and getattr(am, "axis_names", ()):
+            return am
+    return mesh if mesh is not None else current_mesh()
+
+
+def _install_compat() -> None:
+    if not hasattr(jax, "shard_map"):
+        def _jax_shard_map(f, *, mesh, in_specs, out_specs,
+                           axis_names=frozenset(), **kw):
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names)
+        jax.shard_map = _jax_shard_map
+
+
+_install_compat()

@@ -24,3 +24,23 @@ def gram(x: jnp.ndarray, transpose: bool = True) -> jnp.ndarray:
     xp = _pad_to(x, _k.DEFAULT_BK, _k.DEFAULT_BN)
     g = _k.gram_xtx(xp)
     return g[:n, :n]
+
+
+def _pad_to_batched(x: jnp.ndarray, mult_m: int, mult_n: int) -> jnp.ndarray:
+    _, m, n = x.shape
+    return jnp.pad(x, ((0, 0), (0, (-m) % mult_m), (0, (-n) % mult_n)))
+
+
+def gram_batched(x: jnp.ndarray, transpose: bool = True) -> jnp.ndarray:
+    """Batched Gram over a (k, m, n) stack of slices in one kernel launch.
+
+    transpose=True  -> X^T X per slice: (k, n, n)
+    transpose=False -> X X^T per slice: (k, m, m)
+    """
+    x = x.astype(jnp.float32)
+    if not transpose:
+        x = jnp.swapaxes(x, 1, 2)
+    n = x.shape[2]
+    xp = _pad_to_batched(x, _k.DEFAULT_BK, _k.DEFAULT_BN)
+    g = _k.gram_xtx_batched(xp)
+    return g[:, :n, :n]

@@ -8,3 +8,9 @@ def gram_xtx(x: jnp.ndarray) -> jnp.ndarray:
 
 def gram_xxt(x: jnp.ndarray) -> jnp.ndarray:
     return x.astype(jnp.float32) @ x.astype(jnp.float32).T
+
+
+def gram_xtx_batched(x: jnp.ndarray) -> jnp.ndarray:
+    """(k, m, n) -> (k, n, n) stack of X^T X."""
+    xf = x.astype(jnp.float32)
+    return jnp.einsum("kmi,kmj->kij", xf, xf)

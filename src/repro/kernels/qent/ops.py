@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the qent kernel (padding + entropy reduction)."""
+"""jit'd public wrappers for the qent kernel (padding + entropy reduction)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,24 +7,41 @@ from repro.kernels.qent import qent as _k
 from repro.kernels.qent import ref as _ref
 
 
-def quantized_entropy(x: jnp.ndarray, eps, num_bins: int = _k.DEFAULT_BINS) -> jnp.ndarray:
-    """Entropy (bits/symbol) of quantized data via the Pallas histogram.
+def quantized_entropy_sweep(
+    x: jnp.ndarray,
+    epss: jnp.ndarray,
+    num_bins: int = _k.DEFAULT_BINS,
+) -> jnp.ndarray:
+    """Entropies for a stack of slices at a vector of error bounds.
 
-    Padding uses the first element so the pad value lands in an existing
-    bin; its count is subtracted from that bin afterwards.
+    ``x``: (k, ...) stack (trailing dims flattened per slice);
+    ``epss``: (e,).  Returns (k, e) bits/symbol from one fused kernel
+    launch that reads each input tile once.  Per-slice padding reuses the
+    slice's own first element (so the pad lands in an existing bin) and
+    its count is subtracted from that bin per eps afterwards.
     """
-    flat = x.reshape(-1).astype(jnp.float32)
-    n = flat.shape[0]
+    k = x.shape[0]
+    flat = x.reshape(k, -1).astype(jnp.float32)
+    epss = jnp.asarray(epss, jnp.float32).reshape(-1)
+    e = epss.shape[0]
+    n = flat.shape[1]
     pad = (-n) % _k.DEFAULT_TILE
     if pad:
-        flat_p = jnp.concatenate([flat, jnp.broadcast_to(flat[:1], (pad,))])
+        flat_p = jnp.concatenate(
+            [flat, jnp.broadcast_to(flat[:, :1], (k, pad))], axis=1)
     else:
         flat_p = flat
-    hist = _k.qent_histogram(flat_p, jnp.asarray(eps, jnp.float32), bins=num_bins)
+    hist = _k.qent_histogram_sweep(flat_p, epss, bins=num_bins)  # (k, e, B)
     if pad:
-        first_code = jnp.floor(flat[0] / eps).astype(jnp.int32)
-        idx = jnp.where(first_code % num_bins < 0,
-                        first_code % num_bins + num_bins,
-                        first_code % num_bins)
-        hist = hist.at[idx].add(-pad)
-    return _ref.entropy_bits(hist)
+        first_code = jnp.floor(flat[:, :1] / epss[None, :]).astype(jnp.int32)
+        idx = first_code % num_bins        # jnp floored-mod: already in [0, B)
+        hist = hist.at[jnp.arange(k)[:, None], jnp.arange(e)[None, :], idx
+                       ].add(-pad)
+    return _ref.entropy_bits_rows(hist)
+
+
+def quantized_entropy(x: jnp.ndarray, eps, num_bins: int = _k.DEFAULT_BINS) -> jnp.ndarray:
+    """Entropy (bits/symbol) of one slice at one eps: the (k=1, e=1) case
+    of the fused sweep (single implementation of the padding logic)."""
+    return quantized_entropy_sweep(
+        x.reshape(1, -1), jnp.asarray([eps], jnp.float32), num_bins)[0, 0]

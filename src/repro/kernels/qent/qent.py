@@ -2,13 +2,27 @@
 
 The paper's q-ent predictor needs the histogram of ``floor(d / eps)``.
 GPUs use atomics/hash maps; TPUs have no scatter in VMEM, so we bucket the
-codes into ``B`` *hashed* bins via a one-hot compare-and-reduce, which the
-VPU executes as dense (T, B) lane-parallel ops -- the standard TPU
-histogram idiom.  Hash collisions only *lower* the measured entropy; with
-B = 4096 and the paper's error bounds the code ranges fit in one window so
-the hash is injective (tests assert exactness in that regime).
+codes into ``B`` *hashed* bins via compare-and-reduce against the bin
+iota.  Hash collisions only *lower* the measured entropy; with B = 4096
+and the paper's error bounds the code ranges fit in one window so the
+hash is injective (tests assert exactness in that regime).
 
-Grid: 1-D over tiles of the flattened input; the histogram accumulates in
+Accumulation scheme: instead of materializing the dense
+``(8, tile/8, bins)`` one-hot (33 MB of int32 at the default tile/bins —
+over VMEM), each of the 8 sublane rows is compared and reduced on its
+own, so the peak live compare is ``(tile/8, bins)`` and the 8 partial
+histograms are summed into the accumulator at the end.  When lowering
+for real TPU hardware the tile auto-shrinks until that compare fits the
+VMEM budget (large-``bins`` configs trade grid steps for residency);
+interpret mode keeps the full tile.
+
+``qent_histogram_sweep`` is the sweep engine: a (k, n) stack of slices
+x an (e,) vector of error bounds in ONE launch.  Each input tile is read
+from HBM once and quantized at every error bound while resident in VMEM,
+turning e full passes over the data into one.  The single-(slice, eps)
+histogram is its (k=1, e=1) case (see ops.py).
+
+Grid: (slices, tiles of the flattened input); histograms accumulate in
 the output ref across grid steps (sequential TPU grid).
 """
 from __future__ import annotations
@@ -23,44 +37,86 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_TILE = 2048
 DEFAULT_BINS = 4096
 
+# per-sublane compare budget when lowering for real TPU hardware: the
+# (tile/8, bins) int32 one-hot must leave room in ~16 MB of VMEM
+_VMEM_COMPARE_BUDGET = 8 * 1024 * 1024
 
-def _qent_kernel(eps_ref, x_ref, hist_ref, *, bins: int):
-    @pl.when(pl.program_id(0) == 0)
+
+def _fit_tile(tile: int, bins: int, interpret: bool) -> int:
+    """Shrink the tile until the per-sublane compare fits VMEM (TPU only).
+
+    Any divisor of the original tile still divides the padded input
+    length, so halving preserves the grid invariants.
+    """
+    if interpret:
+        return tile
+    while tile > 8 and tile % 2 == 0 and (tile // 8) * bins * 4 > _VMEM_COMPARE_BUDGET:
+        tile //= 2
+    if (tile // 8) * bins * 4 > _VMEM_COMPARE_BUDGET:
+        raise ValueError(
+            f"qent kernel compare tile (tile/8={tile // 8}, bins={bins}) "
+            f"exceeds the {_VMEM_COMPARE_BUDGET}-byte VMEM budget even at "
+            f"the minimum tile; use bins <= {_VMEM_COMPARE_BUDGET // 4}")
+    return tile
+
+
+def _hash_codes(x, eps, bins: int):
+    """floor(x/eps) hashed into [0, bins) (positive mod)."""
+    codes = jnp.floor(x / eps).astype(jnp.int32)
+    idx = jax.lax.rem(codes, bins)
+    return jnp.where(idx < 0, idx + bins, idx)
+
+
+def _tile_histogram(idx, bins: int):
+    """Histogram of an (8, t) index tile via per-sublane partial
+    histograms: 8 compares of (t, bins) each, summed at the end."""
+    hist = jnp.zeros((bins,), jnp.int32)
+    t = idx.shape[1]
+    bins_iota = jax.lax.broadcasted_iota(jnp.int32, (t, bins), 1)
+    for s in range(idx.shape[0]):
+        eq = (idx[s, :, None] == bins_iota).astype(jnp.int32)
+        hist += jnp.sum(eq, axis=0)
+    return hist
+
+
+def _qent_sweep_kernel(eps_ref, x_ref, hist_ref, *, bins: int, n_eps: int):
+    @pl.when(pl.program_id(1) == 0)
     def _init():
         hist_ref[...] = jnp.zeros_like(hist_ref)
 
-    eps = eps_ref[0]
-    x = x_ref[...]                                   # (8, tile/8) f32
-    codes = jnp.floor(x / eps).astype(jnp.int32)
-    idx = jax.lax.rem(codes, bins)
-    idx = jnp.where(idx < 0, idx + bins, idx)        # positive mod
-    # one-hot compare against the bin iota, reduce over the tile
-    bins_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, bins), 2)
-    eq = (idx[:, :, None] == bins_iota).astype(jnp.int32)
-    hist_ref[...] += jnp.sum(eq, axis=(0, 1))
+    x = x_ref[0]                                     # (8, tile/8): ONE read
+    for ei in range(n_eps):                          # e histograms, 0 rereads
+        idx = _hash_codes(x, eps_ref[ei], bins)
+        hist_ref[0, ei, :] += _tile_histogram(idx, bins)
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "bins"))
-def qent_histogram(
+def qent_histogram_sweep(
     x: jnp.ndarray,
-    eps: jnp.ndarray,
+    epss: jnp.ndarray,
     tile: int = DEFAULT_TILE,
     bins: int = DEFAULT_BINS,
 ) -> jnp.ndarray:
-    """Histogram of hashed quantization codes. x: flat f32, len % tile == 0."""
-    (n,) = x.shape
+    """(k, n) slice stack x (e,) error bounds -> (k, e, bins) histograms.
+
+    One launch; grid = (k slices, n/tile tiles).  Each tile is quantized
+    at all e error bounds while resident in VMEM.
+    """
+    k, n = x.shape
+    (n_eps,) = epss.shape
     assert n % tile == 0, (n, tile)
-    x2 = x.reshape(n // 8, 8).T                      # (8, n/8): sublane-major
-    eps_arr = jnp.asarray([eps], jnp.float32)
-    kernel = functools.partial(_qent_kernel, bins=bins)
+    interpret = jax.default_backend() != "tpu"
+    tile = _fit_tile(tile, bins, interpret)
+    xb = jnp.swapaxes(x.reshape(k, n // 8, 8), 1, 2)  # (k, 8, n/8)
+    kernel = functools.partial(_qent_sweep_kernel, bins=bins, n_eps=n_eps)
     return pl.pallas_call(
         kernel,
-        grid=(n // tile,),
+        grid=(k, n // tile),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((8, tile // 8), lambda i: (0, i)),
+            pl.BlockSpec((1, 8, tile // 8), lambda s, t: (s, 0, t)),
         ],
-        out_specs=pl.BlockSpec((bins,), lambda i: (0,)),
-        out_shape=jax.ShapeDtypeStruct((bins,), jnp.int32),
-        interpret=jax.default_backend() != "tpu",
-    )(eps_arr, x2)
+        out_specs=pl.BlockSpec((1, n_eps, bins), lambda s, t: (s, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n_eps, bins), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(epss, jnp.float32), xb)

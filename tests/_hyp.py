@@ -1,0 +1,53 @@
+"""hypothesis, or a deterministic stand-in when it isn't installed.
+
+The fallback turns ``@given(s1, s2, ...)`` into an eager sweep over a
+small fixed sample grid per strategy — far weaker than real property
+testing, but it keeps the suite collecting and the properties exercised
+in minimal environments (CI images without hypothesis).
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import itertools
+
+    HAVE_HYPOTHESIS = False
+
+    class _Samples:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _St:
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            mid = (min_value + max_value) / 2.0
+            return _Samples([min_value, mid, max_value])
+
+        @staticmethod
+        def integers(min_value, max_value, **_kw):
+            return _Samples([min_value, (min_value + max_value) // 2, max_value])
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Samples(seq)
+
+    st = _St()
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strategies):
+        # no functools.wraps: pytest must see the zero-arg signature, not
+        # the wrapped one (it would demand fixtures for the sample args)
+        def deco(fn):
+            def wrapper():
+                for combo in itertools.product(
+                        *[s.samples for s in strategies]):
+                    fn(*combo)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

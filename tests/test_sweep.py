@@ -1,0 +1,138 @@
+"""Batched fused featurization engine: kernel oracles + regression vs the
+looped per-(slice, eb) path (Pallas runs in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import predictors as P
+from repro.data import gaussian, scientific
+
+
+@pytest.fixture(scope="module")
+def slices():
+    return scientific.field_slices("miranda-vx", count=5, n=96)
+
+
+@pytest.fixture(scope="module")
+def eb_grid(slices):
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    # injective-binning regime: every histogram/sort path is exact here
+    return [r * rng for r in (1e-4, 1e-3, 1e-2, 1e-1)]
+
+
+# ------------------------------------------------------------- batched gram
+@pytest.mark.parametrize("shape", [(3, 128, 128), (4, 96, 130), (2, 300, 180)])
+def test_gram_batched_matches_per_slice(shape):
+    from repro.kernels.gram import ops, ref
+    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    got = ops.gram_batched(x, transpose=True)
+    want = jnp.stack([ref.gram_xtx(s) for s in x])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-3)
+
+
+def test_gram_batched_xxt():
+    from repro.kernels.gram import ops, ref
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 100, 250))
+    got = ops.gram_batched(x, transpose=False)
+    want = jnp.stack([ref.gram_xxt(s) for s in x])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-3)
+
+
+# ------------------------------------------------------------ multi-eps qent
+def test_qent_sweep_kernel_matches_bincount(slices, eb_grid):
+    """Fused multi-eps kernel vs an np.bincount oracle, per (slice, eb)."""
+    from repro.kernels.qent import ops
+    flat = np.asarray(slices.reshape(slices.shape[0], -1))
+    got = np.asarray(ops.quantized_entropy_sweep(
+        jnp.asarray(flat), jnp.asarray(eb_grid, jnp.float32),
+        num_bins=65536))
+    for s in range(flat.shape[0]):
+        for i, eps in enumerate(eb_grid):
+            codes = np.floor(flat[s] / eps).astype(np.int64)
+            counts = np.bincount(codes - codes.min())
+            p = counts[counts > 0] / counts.sum()
+            expect = float(-(p * np.log2(p)).sum())
+            assert abs(got[s, i] - expect) < 1e-4, (s, i, got[s, i], expect)
+
+
+def test_qent_sweep_kernel_matches_hashed_ref(slices):
+    """In the colliding regime the kernel must equal the hashed oracle."""
+    from repro.kernels.qent import ops, ref
+    flat = slices.reshape(slices.shape[0], -1)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    epss = jnp.asarray([1e-5 * rng, 1e-3 * rng], jnp.float32)
+    got = ops.quantized_entropy_sweep(flat, epss, num_bins=4096)
+    want = ref.quantized_entropy_sweep(flat, np.asarray(epss), bins=4096)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_qent_sweep_jnp_matches_single(slices, eb_grid):
+    """Sort-based sweep equals the scalar histogram path per (slice, eb)."""
+    got = np.asarray(P.quantized_entropy_sweep(slices, jnp.asarray(eb_grid)))
+    for s in range(slices.shape[0]):
+        for i, eps in enumerate(eb_grid):
+            want = float(P.quantized_entropy(slices[s], eps))
+            assert abs(got[s, i] - want) < 1e-4, (s, i, got[s, i], want)
+
+
+# ----------------------------------------------------------- features sweep
+def test_features_sweep_matches_looped(slices, eb_grid):
+    """(k, e, 2) sweep tensor == looped features_2d per (slice, eb)."""
+    sweep = np.asarray(P.features_sweep(slices, jnp.asarray(eb_grid)))
+    for s in range(slices.shape[0]):
+        for i, eps in enumerate(eb_grid):
+            want = np.asarray(P.features_2d(slices[s], eps))
+            np.testing.assert_allclose(sweep[s, i], want, rtol=1e-5,
+                                       atol=1e-4)
+
+
+def test_features_sweep_kernel_route_consistent(slices):
+    # error bounds where the 4096-bin hash is injective (code range < 4096)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    eb_grid = [r * rng for r in (1e-3, 1e-2, 1e-1)]
+    cfg_j = P.PredictorConfig(use_kernels=False, qent_bins=4096)
+    cfg_k = P.PredictorConfig(use_kernels=True, qent_bins=4096)
+    f_j = P.features_sweep(slices, jnp.asarray(eb_grid), cfg_j)
+    f_k = P.features_sweep(slices, jnp.asarray(eb_grid), cfg_k)
+    np.testing.assert_allclose(np.asarray(f_j), np.asarray(f_k),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_svd_trunc_batch_matches_scalar(slices):
+    got = np.asarray(P.svd_trunc_batch(slices))
+    want = np.asarray([float(P.svd_trunc(s)) for s in slices])
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_features_sweep_finite_on_constant_slices():
+    x = jnp.ones((3, 64, 64))
+    f = P.features_sweep(x, [1e-3, 1e-2])
+    assert bool(jnp.all(jnp.isfinite(f)))
+
+
+# -------------------------------------------------------------- slice cache
+def test_slice_cache_prefetch_and_memo(slices, eb_grid):
+    cache = P.features_2d_cached(slices[0])
+    pre = cache.prefetch(jnp.asarray(eb_grid))
+    assert pre.shape == (len(eb_grid), 2)
+    for i, eps in enumerate(eb_grid):
+        np.testing.assert_allclose(np.asarray(cache(eps)),
+                                   np.asarray(pre[i]), atol=1e-6)
+        want = np.asarray(P.features_2d(slices[0], eps))
+        np.testing.assert_allclose(np.asarray(cache(eps)), want, rtol=1e-5,
+                                   atol=1e-4)
+
+
+def test_engine_single_eb_column(slices, eb_grid):
+    from repro.core import pipeline as PL
+    eng = P.get_engine()
+    col = eng.features(slices, eb_grid[1])
+    sweep = eng.sweep(slices, jnp.asarray(eb_grid))
+    np.testing.assert_allclose(np.asarray(col), np.asarray(sweep[:, 1, :]),
+                               atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(PL.featurize_slices(slices, eb_grid[1])),
+        np.asarray(col), atol=1e-6)

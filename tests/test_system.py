@@ -91,7 +91,7 @@ def test_paper_pipeline_feeds_gradient_gate():
     """q-ent-based predicted CR orders gradient buckets the same way the
     real zstd-backed coder does (rank agreement on a small set)."""
     from repro.train.grad_compress import predicted_cr_int8
-    import zstandard
+    zstandard = pytest.importorskip("zstandard")
     fields = ["miranda-vx", "nyx-vx", "scale-u"]
     pred, real = [], []
     for f in fields:
