@@ -1,0 +1,125 @@
+"""Sharded sweep benchmark: one featurization sweep spanning N CPU devices
+vs the single-device engine, with an exactness gate.
+
+The device count is locked at jax init, so each configuration runs in a
+child interpreter with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set before jax is imported.  Every child featurizes the SAME (k, e) sweep
+(deterministic synthetic field), saves the (k, e, 2) tensor and its
+timing; the parent asserts the multi-device outputs match the 1-device
+engine to f32 tolerance (the sharded body is the single-device body run
+per shard, so on CPU the match is typically exact) and records the
+single- vs multi-device timings side by side.
+
+Virtual CPU devices share the same cores, so multi-device *wall-clock*
+speedup is not the acceptance signal here (that comes on real multi-chip
+hardware); the benchmark's job is the equivalence gate + a record of the
+sharding overhead.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+
+K, N = 32, 160
+K_RAGGED = 27          # non-divisible slice count: exercises pad + drop
+EB_RELS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 1e-1)
+DEVICE_COUNTS = (1, 8)
+
+
+def _child(num_devices: int, out_prefix: str) -> None:
+    import jax
+    import jax.numpy as jnp
+    from benchmarks import common
+    from repro.core import predictors as P
+    from repro.dist import sharding as S
+    from repro.launch import mesh as M
+
+    assert len(jax.devices()) == num_devices, jax.devices()
+    slices = common.field_slices_cached("miranda-vx", K, N)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    epss = jnp.asarray([r * rng for r in EB_RELS], jnp.float32)
+
+    def run(stack):
+        if num_devices == 1:
+            return P.features_sweep(stack, epss, sharded=False)
+        with S.use_mesh(M.make_sweep_mesh()):
+            return P.features_sweep(stack, epss)
+
+    t_full = common.timeit(lambda: run(slices), warmup=1, iters=5)
+    out_full = np.asarray(run(slices))
+    t_ragged = common.timeit(lambda: run(slices[:K_RAGGED]), warmup=1, iters=5)
+    out_ragged = np.asarray(run(slices[:K_RAGGED]))
+
+    np.save(out_prefix + ".full.npy", out_full)
+    np.save(out_prefix + ".ragged.npy", out_ragged)
+    with open(out_prefix + ".json", "w") as f:
+        json.dump({"devices": num_devices, "full_us": t_full,
+                   "ragged_us": t_ragged}, f)
+
+
+def main() -> dict:
+    from benchmarks import common
+
+    results = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        for d in DEVICE_COUNTS:
+            prefix = os.path.join(tmp, f"dev{d}")
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+            env["PYTHONPATH"] = os.pathsep.join(
+                [os.path.join(os.path.dirname(__file__), "..", "src"),
+                 os.path.dirname(os.path.dirname(__file__)),
+                 env.get("PYTHONPATH", "")])
+            proc = subprocess.run(
+                [sys.executable, "-m", "benchmarks.bench_sweep_sharded",
+                 "--child", str(d), prefix],
+                env=env, capture_output=True, text=True, timeout=560)
+            assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+            with open(prefix + ".json") as f:
+                results[d] = json.load(f)
+            results[d]["full"] = np.load(prefix + ".full.npy")
+            results[d]["ragged"] = np.load(prefix + ".ragged.npy")
+
+    base = results[DEVICE_COUNTS[0]]
+    out = {"k": K, "k_ragged": K_RAGGED, "e": len(EB_RELS)}
+    for d in DEVICE_COUNTS[1:]:
+        diff_full = float(np.abs(results[d]["full"] - base["full"]).max())
+        diff_ragged = float(
+            np.abs(results[d]["ragged"] - base["ragged"]).max())
+        common.emit(
+            f"sweep_sharded/{d}dev", results[d]["full_us"],
+            f"k={K} e={len(EB_RELS)} single_us={base['full_us']:.0f} "
+            f"sharded_us={results[d]['full_us']:.0f} "
+            f"ragged_single_us={base['ragged_us']:.0f} "
+            f"ragged_sharded_us={results[d]['ragged_us']:.0f} "
+            f"maxdiff={diff_full:.2e} maxdiff_ragged={diff_ragged:.2e}")
+        out[f"dev{d}"] = {
+            "single_us": base["full_us"],
+            "sharded_us": results[d]["full_us"],
+            "ragged_single_us": base["ragged_us"],
+            "ragged_sharded_us": results[d]["ragged_us"],
+            "max_abs_diff": diff_full,
+            "max_abs_diff_ragged": diff_ragged,
+        }
+        # f32 tolerance gate (acceptance): the sharded sweep must be a
+        # drop-in replacement for the single-device engine
+        assert diff_full < 1e-5, f"sharded sweep diverged: {diff_full}"
+        assert diff_ragged < 1e-5, \
+            f"sharded ragged sweep diverged: {diff_ragged}"
+    common.save_json("bench_sweep_sharded", out)
+    return out
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child":
+        _child(int(sys.argv[2]), sys.argv[3])
+    else:
+        res = main()
+        print("PASS: sharded == single-device to f32 tolerance;",
+              json.dumps({k: v for k, v in res.items() if k.startswith("dev")},
+                         indent=1))

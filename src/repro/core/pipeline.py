@@ -43,23 +43,37 @@ def featurize_slices(
     slices: jnp.ndarray,
     eps: float,
     cfg: P.PredictorConfig = P.PredictorConfig(),
+    *,
+    sharded: bool | None = None,
+    mesh=None,
 ) -> jnp.ndarray:
     """(k, m, n) stack of 2-D slices -> (k, 2) predictor matrix.
 
     Routed through the batched sweep engine (single-eb column): one
     batched Gram + eigvalsh for all k slices instead of k separate solves.
+    Under an active mesh (or explicit ``mesh``) the slice axis is sharded
+    across devices; ``sharded=False`` pins the single-device path.
     """
-    return P.get_engine(cfg).features(slices, eps)
+    return P.get_engine(cfg).features(slices, eps, sharded=sharded, mesh=mesh)
 
 
 def featurize_sweep(
     slices: jnp.ndarray,
     epss,
     cfg: P.PredictorConfig = P.PredictorConfig(),
+    *,
+    sharded: bool | None = None,
+    mesh=None,
+    gather: bool = True,
 ) -> jnp.ndarray:
     """(k, m, n) stack x (e,) error bounds -> (k, e, 2) predictor tensor
-    in one pass over the data (see ``predictors.FeaturizationEngine``)."""
-    return P.get_engine(cfg).sweep(slices, epss)
+    in one pass over the data (see ``predictors.FeaturizationEngine``).
+
+    Shards the slice axis over an active (or passed) mesh; ``gather=False``
+    keeps the padded result sharded for distributed downstream stages.
+    """
+    return P.get_engine(cfg).sweep(slices, epss, sharded=sharded, mesh=mesh,
+                                   gather=gather)
 
 
 def kfold_evaluate(

@@ -26,6 +26,9 @@ import jax
 import jax.numpy as jnp
 
 
+from repro.quant import (INT32_CODE_MIN, INT32_CODE_MAX,
+                         validate_eps_positive as _validate_eps_positive)
+
 DEFAULT_VARIANCE_FRACTION_2D = 0.99
 DEFAULT_VARIANCE_FRACTION_3D = 0.90
 
@@ -113,8 +116,15 @@ def _entropy_from_counts(counts: jnp.ndarray) -> jnp.ndarray:
 
 
 def quantized_codes(x: jnp.ndarray, eps: float) -> jnp.ndarray:
-    """Linear quantization codes ``floor(d/eps)`` as int32 (paper section 3.1.5)."""
-    return jnp.floor(x / eps).astype(jnp.int32)
+    """Linear quantization codes ``floor(d/eps)`` as int32 (paper section 3.1.5).
+
+    Raises ``ValueError`` for ``eps <= 0`` (concrete values), and clamps
+    the float codes to the int32 range before the cast so extreme
+    (value, eps) pairs saturate instead of silently wrapping.
+    """
+    _validate_eps_positive(eps)
+    scaled = jnp.floor(x / eps)
+    return jnp.clip(scaled, INT32_CODE_MIN, INT32_CODE_MAX).astype(jnp.int32)
 
 
 def quantized_entropy(
@@ -246,6 +256,7 @@ def quantized_entropy_sweep(
     paths whenever the code range fits the bins (the study's validated
     regime, where those paths are exact too).
     """
+    _validate_eps_positive(epss)
     k = slices.shape[0]
     flat = slices.astype(jnp.float32).reshape(k, -1)
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
@@ -261,7 +272,8 @@ def quantized_entropy_sweep(
         # lax.map over ebs keeps the peak working set at (k, n) -- the
         # same order as one step of the looped baseline -- instead of
         # materializing (k, e, n) temporaries for the whole sweep.
-        codes = jnp.floor(xs / eps).astype(jnp.int32)
+        codes = jnp.clip(jnp.floor(xs / eps),         # saturate, don't wrap
+                         INT32_CODE_MIN, INT32_CODE_MAX).astype(jnp.int32)
         start = jnp.concatenate(                      # run starts, (k, n)
             [ones, codes[:, 1:] != codes[:, :-1]], axis=1)
         run_start = jax.lax.cummax(jnp.where(start, iota, 0), axis=1)
@@ -276,8 +288,12 @@ def quantized_entropy_sweep(
     return jax.lax.map(one_eps, epss).T               # (e, k) -> (k, e)
 
 
-@functools.partial(jax.jit, static_argnames=("vf", "bins", "use_kernels"))
-def _features_sweep_traced(slices, epss, *, vf, bins, use_kernels):
+def _features_sweep_impl(slices, epss, *, vf, bins, use_kernels):
+    """Pure sweep body: (k, m, n) x (e,) -> (k, e, 2).
+
+    Kept jit-free so the distributed layer (``repro.dist.sweep``) can call
+    it inside a ``shard_map`` body on each device's local slice shard.
+    """
     x = slices.astype(jnp.float32)
     sigma = jnp.std(x, axis=(1, 2))
     sv = svd_trunc_batch(x, vf, use_kernel=use_kernels)
@@ -288,10 +304,18 @@ def _features_sweep_traced(slices, epss, *, vf, bins, use_kernels):
         [log_qe, jnp.broadcast_to(log_ratio[:, None], log_qe.shape)], axis=-1)
 
 
+_features_sweep_traced = jax.jit(
+    _features_sweep_impl, static_argnames=("vf", "bins", "use_kernels"))
+
+
 def features_sweep(
     slices: jnp.ndarray,
     epss,
     cfg: PredictorConfig = PredictorConfig(),
+    *,
+    sharded: bool | None = None,
+    mesh=None,
+    gather: bool = True,
 ) -> jnp.ndarray:
     """The full predictor tensor in one pass: (k, m, n) x (e,) -> (k, e, 2).
 
@@ -299,12 +323,35 @@ def features_sweep(
     histogram); column [..., 1] is log(svd_trunc / sigma) (eb-independent,
     computed once and broadcast).  Matches looped ``features_2d`` to f32
     tolerance (regression-tested).
+
+    Distribution: with ``sharded=None`` (default) the sweep automatically
+    runs as a ``shard_map`` over the slice axis whenever a mesh whose
+    "slices"-mapped axis has extent > 1 is active (``dist.sharding.use_mesh``)
+    or passed as ``mesh``; ``sharded=False`` forces the single-device path
+    and ``sharded=True`` requires a mesh (raising if none is usable).
+    ``gather=False`` returns the padded per-device result still sharded
+    over the mesh (see ``repro.dist.sweep.features_sweep_sharded``).
     """
     if slices.ndim != 3:
         raise ValueError(
             f"features_sweep expects a (k, m, n) slice stack, got "
             f"{slices.shape}; wrap a single slice as x[None]")
+    _validate_eps_positive(epss)
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
+    # Auto-routing skips k=1: a single slice has no parallelism to split,
+    # so sharding would only broadcast redundant copies of the same work
+    # (UC1/UC2 featurize one query slice at a time under a serving mesh).
+    if sharded or (sharded is None and slices.shape[0] > 1):
+        from repro.dist import sweep as dsweep
+        use_mesh = dsweep.active_sweep_mesh(mesh)
+        if sharded and use_mesh is None:
+            raise ValueError(
+                "features_sweep(sharded=True) needs a mesh with a "
+                "'slices'-mapped axis of extent > 1 (pass mesh= or "
+                "activate one via dist.sharding.use_mesh)")
+        if use_mesh is not None:
+            return dsweep.features_sweep_sharded(
+                slices, epss, cfg, mesh=use_mesh, gather=gather)
     return _features_sweep_traced(
         slices, epss, vf=cfg.variance_fraction_2d, bins=cfg.qent_bins,
         use_kernels=cfg.use_kernels)
@@ -357,6 +404,7 @@ class SliceCache:
         return feats
 
     def __call__(self, eps) -> jnp.ndarray:
+        _validate_eps_positive(eps)
         key = self._key(eps)
         if key not in self._memo:
             qe = _qent_sweep_traced(
@@ -375,16 +423,40 @@ class FeaturizationEngine:
     * ``sweep(slices, epss)``  -- (k, m, n) x (e,) -> (k, e, 2), one pass.
     * ``features(slices, eps)`` -- (k, 2): the e=1 column of the sweep.
     * ``cached(x)``            -- per-slice :class:`SliceCache`.
+
+    Distributed sweeps
+    ------------------
+    ``sweep``/``features`` shard the slice axis across every device of an
+    active mesh (logical axis "slices" -> physical "data"; see
+    ``repro.dist.sweep``).  Nothing changes at the call site beyond
+    activating a mesh -- on a multi-device host (or a CPU dev box with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` exported before
+    jax is imported)::
+
+        from repro.dist import sharding as S
+        from repro.launch import mesh as M
+        engine = get_engine()
+        with S.use_mesh(M.make_sweep_mesh()):
+            feats = engine.sweep(slices, ebs)    # shard_map over slices
+
+    Slice counts that don't divide the mesh are padded (and the pad
+    dropped from the gathered result); ``gather=False`` keeps the padded
+    result sharded for downstream stages that stay distributed.  The
+    sharded sweep matches the single-device engine to f32 tolerance
+    (asserted by tests/test_dist_sweep.py and bench_sweep_sharded).
     """
 
     def __init__(self, cfg: PredictorConfig = PredictorConfig()):
         self.cfg = cfg
 
-    def sweep(self, slices: jnp.ndarray, epss) -> jnp.ndarray:
-        return features_sweep(slices, epss, self.cfg)
+    def sweep(self, slices: jnp.ndarray, epss, *, sharded: bool | None = None,
+              mesh=None, gather: bool = True) -> jnp.ndarray:
+        return features_sweep(slices, epss, self.cfg, sharded=sharded,
+                              mesh=mesh, gather=gather)
 
-    def features(self, slices: jnp.ndarray, eps: float) -> jnp.ndarray:
-        return self.sweep(slices, [eps])[:, 0, :]
+    def features(self, slices: jnp.ndarray, eps: float, *,
+                 sharded: bool | None = None, mesh=None) -> jnp.ndarray:
+        return self.sweep(slices, [eps], sharded=sharded, mesh=mesh)[:, 0, :]
 
     def cached(self, x: jnp.ndarray) -> SliceCache:
         return SliceCache(x, self.cfg)

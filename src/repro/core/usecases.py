@@ -25,6 +25,24 @@ from repro.core import predictors as P
 from repro import compressors as C
 
 
+# Model outputs pass through np.log during cross-eb interpolation and
+# bisection compares the result against the target ratio, so a degenerate
+# regression (extrapolation far outside the training range) must never
+# yield log(<=0) = NaN: clamp predicted CRs into a positive finite band.
+# +inf must clamp to the CEILING (still "far above any target"), not the
+# floor, or bisection would discard the wrong half of the bracket; NaN
+# carries no direction, so it lands on the floor.
+_CR_FLOOR = 1e-9
+_CR_CEIL = 1e9
+
+
+def _clamp_cr(value) -> float:
+    v = float(value)
+    if np.isnan(v):
+        return _CR_FLOOR
+    return float(np.clip(v, _CR_FLOOR, _CR_CEIL))
+
+
 @dataclasses.dataclass
 class EbGridModel:
     """CR predictor across error bounds: one model per grid eb +
@@ -41,17 +59,26 @@ class EbGridModel:
         ebs: Sequence[float],
         model: str = "spline",
         cfg: P.PredictorConfig = P.PredictorConfig(),
+        mesh=None,
     ) -> "EbGridModel":
         comp = C.get(compressor)
         # ONE fused sweep featurizes every (slice, grid-eb) pair: the SVD
         # runs once per slice and each slice is read once for all ebs,
-        # instead of the old per-eb re-featurization.
-        feats = P.get_engine(cfg).sweep(slices, np.asarray(ebs, np.float64))
+        # instead of the old per-eb re-featurization.  Under a mesh the
+        # sweep shards the slice axis across devices; the per-eb fits are
+        # tiny, so features are all-gathered (np.asarray) while the
+        # training-time compressor runs execute on local shards only
+        # (partitioned over processes, all-gathered as a (k, e) table).
+        from repro.dist import sweep as DS
+        feats = np.asarray(
+            P.get_engine(cfg).sweep(slices, np.asarray(ebs, np.float64),
+                                    mesh=mesh))
+        cr_table = DS.training_crs(comp, slices, ebs)
         models = []
         for i, eps in enumerate(ebs):
-            crs = jnp.asarray([comp.cr(s, float(eps)) for s in slices])
             models.append(PL.CRPredictor.train_from_features(
-                feats[:, i, :], crs, float(eps), model, cfg))
+                jnp.asarray(feats[:, i, :]), jnp.asarray(cr_table[:, i]),
+                float(eps), model, cfg))
         return EbGridModel(np.asarray(ebs, np.float64), models, compressor, cfg)
 
     def predict(self, data: jnp.ndarray, eps: float,
@@ -77,11 +104,11 @@ class EbGridModel:
         # q-ent is eb-dependent -> evaluate features at the grid ebs
         from repro.core.regression import predict_fast
         f0 = feat_cache(self.ebs[i0])[None]
-        c0 = float(predict_fast(self.models[i0].model, f0)[0])
+        c0 = _clamp_cr(predict_fast(self.models[i0].model, f0)[0])
         if i1 == i0:
             return c0
         f1 = feat_cache(self.ebs[i1])[None]
-        c1 = float(predict_fast(self.models[i1].model, f1)[0])
+        c1 = _clamp_cr(predict_fast(self.models[i1].model, f1)[0])
         return float(np.exp((1 - t) * np.log(c0) + t * np.log(c1)))
 
 
@@ -110,6 +137,9 @@ def find_error_bound_for_cr(
         return lo, cr_lo
     if target_cr >= cr_hi:
         return hi, cr_hi
+    # max_iters=0 must still return a finite probe (mirrors
+    # find_error_bound_exhaustive), not NameError on unbound loop vars
+    mid, cr_mid = hi, cr_hi
     for _ in range(max_iters):
         mid = float(np.exp(0.5 * (np.log(lo) + np.log(hi))))
         cr_mid = grid_model.predict(data, mid, feat_cache)
@@ -167,8 +197,12 @@ def best_compressor(
     structure).
     """
     from repro.core.regression import predict_fast
+    if not models:
+        raise ValueError(
+            "best_compressor needs at least one trained model; got an "
+            "empty models dict (train CRPredictors per compressor first)")
     # featurize under the config the models were trained with
-    cfg = next(iter(models.values())).cfg if models else None
+    cfg = next(iter(models.values())).cfg
     feats = P.get_engine(cfg).features(data[None], eps)
     preds = {name: float(predict_fast(m.model, feats)[0])
              for name, m in models.items()}

@@ -9,6 +9,25 @@ per-dimension divisibility fallback to replication (a 25-head tensor on a
 Also hosts the jax version-compat shims for APIs the call sites use
 unconditionally (``shard_map`` with ``axis_names``, ``pvary``,
 abstract-mesh lookup).
+
+Distributed featurization sweeps
+--------------------------------
+The sweep engine (``repro.core.predictors.features_sweep``) shards its
+slice axis through the logical axis ``"slices"`` (mapped to the physical
+``"data"`` axis by :data:`DEFAULT_RULES`).  Activating any mesh whose
+``"data"`` extent exceeds 1 makes every sweep entering through the engine
+run as a ``shard_map`` over the slice axis (see ``repro.dist.sweep``)::
+
+    # 8 virtual CPU devices: set BEFORE importing jax
+    #   XLA_FLAGS=--xla_force_host_platform_device_count=8
+    from repro.dist import sharding as S
+    from repro.launch import mesh as M
+    with S.use_mesh(M.make_sweep_mesh()):          # 1-D ("data",) mesh
+        feats = engine.sweep(slices, ebs)          # sharded over slices
+
+Slice counts that don't divide the mesh are padded and the pad rows are
+dropped (gather) or masked (sharded-out); see
+``repro.dist.sweep.features_sweep_sharded``.
 """
 from __future__ import annotations
 
@@ -29,6 +48,8 @@ DEFAULT_RULES = {
     "model": ("model",),
     "seq_model": ("model",),
     "layers": (),
+    # featurization sweeps: the slice axis of a (k, m, n) stack
+    "slices": ("data",),
 }
 
 _STATE = threading.local()
@@ -106,6 +127,23 @@ def named_sharding(shape: Sequence[int], logical_axes, mesh: Optional[Mesh] = No
     if mesh is None:
         raise ValueError("named_sharding needs a mesh (arg or use_mesh)")
     return NamedSharding(mesh, spec_for(shape, logical_axes, mesh))
+
+
+def in_manual_context() -> bool:
+    """True while tracing inside a shard_map body (any jax version).
+
+    The old-jax adapter marks its bodies via the ``manual_depth`` flag;
+    native ``jax.shard_map`` is detected through the abstract mesh's
+    Manual axis types (same probe ``pvary_manual`` uses).
+    """
+    if getattr(_STATE, "manual_depth", 0) > 0:
+        return True
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return any(str(am._axis_types_dict.get(n, "")) == "Manual"
+                   for n in am.axis_names)
+    except Exception:
+        return False
 
 
 def shard(x, *logical_axes):

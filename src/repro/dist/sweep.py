@@ -1,0 +1,185 @@
+"""Multi-device sharded featurization sweeps (the distributed sweep layer).
+
+Production fields don't fit one device and sweep requests arrive
+concurrently, so the batched sweep engine
+(``repro.core.predictors.features_sweep``) gains a ``shard_map`` path over
+its slice axis here: the (k, m, n) stack is split across the mesh axis the
+logical ``"slices"`` axis maps to (``"data"`` under the default rules of
+``repro.dist.sharding``), each device runs the fused single-device sweep
+body on its local shard -- one batched Gram + eigvalsh and one multi-eps
+q-ent pass per shard, grid dim 0 of both batched kernels -- and the
+per-device ``(k_local, e, 2)`` results are reassembled into the global
+``(k, e, 2)`` tensor.
+
+Slice counts that don't divide the mesh extent are padded with copies of
+the last slice; the pad rows are dropped from the gathered result
+(``gather=True``) or zero-masked in the still-sharded padded result
+(``gather=False``, for pipelines whose downstream stages stay
+distributed).
+
+Typical invocation on a multi-device CPU host (the flag must be exported
+before jax is imported)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 python ...
+
+    from repro.dist import sharding as S
+    from repro.launch import mesh as M
+    with S.use_mesh(M.make_sweep_mesh()):
+        feats = predictors.features_sweep(slices, ebs)   # auto-sharded
+
+Training support: ``training_crs`` partitions the *compressor* runs an
+``EbGridModel`` fit needs over processes (each host compresses only its
+contiguous block of slices) and all-gathers the (k, e) CR table, matching
+the sweep's features-all-gathered / CRs-computed-locally cost structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as S
+
+
+def active_sweep_mesh(mesh: Optional[Mesh] = None) -> Optional[Mesh]:
+    """The mesh a sweep should shard over, or None for single-device.
+
+    Returns ``mesh`` (or the active ``use_mesh`` mesh) when the logical
+    "slices" axis resolves to a physical extent > 1 and we are not already
+    inside a manual shard_map body (where the engine must run locally).
+    """
+    mesh = mesh if mesh is not None else S.current_mesh()
+    if mesh is None or S.in_manual_context():
+        return None
+    axes = S._physical_axes("slices", mesh)
+    if S._mesh_extent(mesh, axes) <= 1:
+        return None
+    return mesh
+
+
+def slice_axes(mesh: Mesh) -> tuple:
+    """Physical mesh axes the slice axis shards over (non-empty tuple)."""
+    axes = S._physical_axes("slices", mesh)
+    if not axes:
+        raise ValueError(
+            f"mesh {mesh.axis_names} has no axis for the logical 'slices' "
+            "axis; add a rules entry mapping 'slices' to a mesh axis")
+    return axes
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_sweep_fn(mesh: Mesh, axes: tuple, vf: float, bins: int,
+                      use_kernels: bool):
+    """jit'd shard_map sweep for one (mesh, config); cached so repeated
+    sweeps (serving, training grids) reuse the compiled executable."""
+    from repro.core import predictors as PRED
+
+    part = axes[0] if len(axes) == 1 else axes
+
+    def body(local_slices, epss):
+        # each device featurizes its (k_local, m, n) shard with the exact
+        # single-device sweep body: sharded == single-device to f32 tol
+        return PRED._features_sweep_impl(
+            local_slices, epss, vf=vf, bins=bins, use_kernels=use_kernels)
+
+    f = S.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(part, None, None), P(None)),
+        out_specs=P(part, None, None),
+        axis_names=frozenset(axes))
+    return jax.jit(f)
+
+
+def features_sweep_sharded(
+    slices: jnp.ndarray,
+    epss,
+    cfg=None,
+    *,
+    mesh: Optional[Mesh] = None,
+    gather: bool = True,
+) -> jnp.ndarray:
+    """``features_sweep`` sharded over the slice axis of ``mesh``.
+
+    (k, m, n) x (e,) -> (k, e, 2) [``gather=True``] or the padded
+    (k_pad, e, 2) result still sharded over the mesh with pad rows zeroed
+    [``gather=False``]; ``k_pad = ceil(k / extent) * extent``.
+
+    Falls back to the single-device engine when no mesh (or an extent-1
+    mesh) is available, so callers can route unconditionally.
+    """
+    from repro.core import predictors as PRED
+    cfg = cfg if cfg is not None else PRED.PredictorConfig()
+    mesh = active_sweep_mesh(mesh)
+    if mesh is None:
+        return PRED.features_sweep(slices, epss, cfg, sharded=False)
+    if slices.ndim != 3:
+        raise ValueError(
+            f"features_sweep_sharded expects (k, m, n), got {slices.shape}")
+    PRED._validate_eps_positive(epss)
+    epss = jnp.asarray(epss, jnp.float32).reshape(-1)
+
+    axes = slice_axes(mesh)
+    ext = S._mesh_extent(mesh, axes)
+    k = slices.shape[0]
+    pad = (-k) % ext
+    if pad:
+        # pad with the last slice (real data: keeps the eigensolve and the
+        # q-ent sort on the padded rows numerically unexceptional)
+        slices = jnp.concatenate(
+            [slices, jnp.broadcast_to(slices[-1:], (pad,) + slices.shape[1:])],
+            axis=0)
+
+    out = _sharded_sweep_fn(
+        mesh, axes, cfg.variance_fraction_2d, cfg.qent_bins,
+        cfg.use_kernels)(slices, epss)
+
+    if gather:
+        out = out[:k]                                   # drop pad rows
+        return jax.device_put(
+            out, NamedSharding(mesh, P(None, None, None)))
+    if pad:                                             # mask pad rows
+        mask = (jnp.arange(k + pad) < k).astype(out.dtype)
+        out = out * mask[:, None, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Training-side distribution: compressor runs over local slice shards
+# ---------------------------------------------------------------------------
+
+def _even_bounds(k: int, parts: int, index: int) -> tuple[int, int]:
+    """Contiguous [lo, hi) block of ``k`` items for shard ``index`` of
+    ``parts`` (remainder spread over the leading shards)."""
+    base, rem = divmod(k, parts)
+    lo = index * base + min(index, rem)
+    return lo, lo + base + (1 if index < rem else 0)
+
+
+def training_crs(comp, slices, ebs: Sequence[float]) -> np.ndarray:
+    """The (k, e) compression-ratio table an ``EbGridModel`` fit needs,
+    with the compressor executions partitioned over processes.
+
+    Each process runs the (host-side, numpy) compressor only on its
+    contiguous block of slices and the table is all-gathered, so the
+    expensive training-time compressor runs scale out with hosts exactly
+    like the featurization sweep scales out with devices.  Single-process
+    (tests, CI) reduces to the plain full loop.
+    """
+    k = len(slices)
+    parts, index = jax.process_count(), jax.process_index()
+    lo, hi = _even_bounds(k, parts, index)
+    table = np.zeros((k, len(ebs)), np.float64)
+    for i in range(lo, hi):
+        for j, eps in enumerate(ebs):
+            table[i, j] = float(comp.cr(slices[i], float(eps)))
+    if parts == 1:
+        return table
+    from jax.experimental import multihost_utils
+    # non-local rows are zero, so summing the per-process tables
+    # reconstructs the full (k, e) table
+    stacked = multihost_utils.process_allgather(jnp.asarray(table))
+    return np.asarray(stacked).sum(axis=0)

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 
 from repro.kernels.qent import qent as _k
 from repro.kernels.qent import ref as _ref
+from repro.quant import validate_eps_positive as _check_eps
 
 
 def quantized_entropy_sweep(
@@ -20,6 +21,7 @@ def quantized_entropy_sweep(
     slice's own first element (so the pad lands in an existing bin) and
     its count is subtracted from that bin per eps afterwards.
     """
+    _check_eps(epss)
     k = x.shape[0]
     flat = x.reshape(k, -1).astype(jnp.float32)
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
@@ -33,7 +35,9 @@ def quantized_entropy_sweep(
         flat_p = flat
     hist = _k.qent_histogram_sweep(flat_p, epss, bins=num_bins)  # (k, e, B)
     if pad:
-        first_code = jnp.floor(flat[:, :1] / epss[None, :]).astype(jnp.int32)
+        first_code = jnp.clip(               # same saturation as the kernel
+            jnp.floor(flat[:, :1] / epss[None, :]),
+            _k.INT32_CODE_MIN, _k.INT32_CODE_MAX).astype(jnp.int32)
         idx = first_code % num_bins        # jnp floored-mod: already in [0, B)
         hist = hist.at[jnp.arange(k)[:, None], jnp.arange(e)[None, :], idx
                        ].add(-pad)

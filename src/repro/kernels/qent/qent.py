@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.quant import INT32_CODE_MIN, INT32_CODE_MAX
+
 DEFAULT_TILE = 2048
 DEFAULT_BINS = 4096
 
@@ -61,8 +63,12 @@ def _fit_tile(tile: int, bins: int, interpret: bool) -> int:
 
 
 def _hash_codes(x, eps, bins: int):
-    """floor(x/eps) hashed into [0, bins) (positive mod)."""
-    codes = jnp.floor(x / eps).astype(jnp.int32)
+    """floor(x/eps) (int32-saturated) hashed into [0, bins) (positive mod).
+
+    The clamp saturates instead of wrapping -- a wrapped code would
+    scatter into an arbitrary histogram bin."""
+    codes = jnp.clip(jnp.floor(x / eps),
+                     INT32_CODE_MIN, INT32_CODE_MAX).astype(jnp.int32)
     idx = jax.lax.rem(codes, bins)
     return jnp.where(idx < 0, idx + bins, idx)
 

@@ -19,6 +19,19 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_sweep_mesh(num_devices: int | None = None):
+    """1-D ("data",) mesh for distributed featurization sweeps.
+
+    The sweep engine shards its slice axis over "data" (logical axis
+    "slices"; see ``repro.dist.sweep``), so a flat all-device data mesh
+    serves one sweep from every device/host.  On a CPU dev box export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax is
+    imported to get N virtual devices.
+    """
+    n = num_devices if num_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 # TPU v5e hardware model used by the roofline analysis (per chip).
 HW = {
     "peak_flops_bf16": 197e12,     # FLOP/s

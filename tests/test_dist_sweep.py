@@ -1,0 +1,195 @@
+"""Sharded featurization sweeps: multi-device vs single-device equivalence.
+
+Like test_dist.py, every multi-device scenario runs in a child interpreter
+with XLA_FLAGS set before jax is imported (the main pytest process keeps
+whatever device count it started with).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_child(body: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    code = textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def test_sharded_sweep_matches_single_device():
+    """(k, e, 2) from an 8-device mesh == single-device engine, for a
+    divisible k and a non-divisible k (pad + drop)."""
+    out = run_child("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.dist import sharding as S
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        s = scientific.field_slices("miranda-vx", count=16, n=96)
+        rng = float(jnp.max(s) - jnp.min(s))
+        ebs = jnp.asarray([r * rng for r in (1e-4, 1e-2, 1e-1)], jnp.float32)
+        mesh = M.make_sweep_mesh()
+        for k in (16, 11):           # 11 does not divide 8: pad to 16
+            ref = np.asarray(P.features_sweep(s[:k], ebs, sharded=False))
+            with S.use_mesh(mesh):
+                got = np.asarray(P.features_sweep(s[:k], ebs))
+            assert got.shape == (k, 3, 2), got.shape
+            d = float(np.abs(got - ref).max())
+            assert d < 1e-5, (k, d)
+            print("K", k, "MAXDIFF", d)
+    """)
+    assert "K 16" in out and "K 11" in out
+
+
+def test_sharded_out_option_masks_padding():
+    out = run_child("""
+        import jax, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.dist import sharding as S
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        s = scientific.field_slices("cesm-cloud", count=11, n=64)
+        ebs = [1e-3, 1e-2]
+        with S.use_mesh(M.make_sweep_mesh()):
+            padded = P.features_sweep(s, ebs, gather=False)
+            gathered = P.features_sweep(s, ebs)
+        assert padded.shape == (16, 2, 2), padded.shape   # 11 -> pad to 16
+        assert bool(jnp.all(padded[11:] == 0)), "pad rows not masked"
+        assert len(padded.sharding.device_set) == 8, padded.sharding
+        import numpy as np
+        np.testing.assert_allclose(np.asarray(padded[:11]),
+                                   np.asarray(gathered), atol=1e-6)
+        print("SHARDED OUT OK")
+    """)
+    assert "SHARDED OUT OK" in out
+
+
+def test_engine_and_pipeline_auto_route_under_mesh():
+    """The engine/pipeline entry points shard transparently under an
+    active mesh, including the Pallas-kernel route, and spec_for resolves
+    the logical "slices" axis."""
+    out = run_child("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import pipeline as PL, predictors as P
+        from repro.dist import sharding as S
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        s = scientific.field_slices("miranda-vx", count=8, n=96)
+        rng = float(jnp.max(s) - jnp.min(s))
+        ebs = jnp.asarray([r * rng for r in (1e-3, 1e-1)], jnp.float32)
+        ref_sweep = np.asarray(PL.featurize_sweep(s, ebs))
+        ref_feats = np.asarray(PL.featurize_slices(s, float(ebs[0])))
+        cfg_k = P.PredictorConfig(use_kernels=True, qent_bins=4096)
+        ref_kern = np.asarray(P.features_sweep(s, ebs, cfg_k, sharded=False))
+        with S.use_mesh(M.make_sweep_mesh()) as mesh:
+            assert S.spec_for((8, 96, 96), ("slices", None, None)) == \
+                jax.sharding.PartitionSpec("data", None, None)
+            got_sweep = np.asarray(PL.featurize_sweep(s, ebs))
+            got_feats = np.asarray(PL.featurize_slices(s, float(ebs[0])))
+            got_kern = np.asarray(P.features_sweep(s, ebs, cfg_k))
+            # k=1 (the UC1/UC2 per-query shape) must stay on the local
+            # path: nothing to parallelize, so no broadcast launch
+            one = P.features_sweep(s[:1], ebs)
+            assert len(one.sharding.device_set) == 1, one.sharding
+            np.testing.assert_allclose(np.asarray(one), ref_sweep[:1],
+                                       atol=1e-5)
+        np.testing.assert_allclose(got_sweep, ref_sweep, atol=1e-5)
+        np.testing.assert_allclose(got_feats, ref_feats, atol=1e-5)
+        np.testing.assert_allclose(got_kern, ref_kern, atol=1e-5)
+        print("AUTO ROUTE OK")
+    """)
+    assert "AUTO ROUTE OK" in out
+
+
+def test_ebgrid_train_under_mesh_matches():
+    """EbGridModel.train under a mesh (sharded featurization + local-shard
+    CR table) must reproduce the single-device model's predictions."""
+    out = run_child("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core import usecases as UC
+        from repro.dist import sharding as S
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        s = scientific.field_slices("scale-u", count=7, n=64)
+        rng = float(jnp.max(s) - jnp.min(s))
+        ebs = [1e-4 * rng, 1e-3 * rng, 1e-2 * rng]
+        gm_ref = UC.EbGridModel.train(s[:6], "sz2", ebs)
+        with S.use_mesh(M.make_sweep_mesh()):
+            gm_sh = UC.EbGridModel.train(s[:6], "sz2", ebs)
+        for eps in (ebs[0], 3e-4 * rng, ebs[-1]):
+            a = gm_ref.predict(s[6], eps)
+            b = gm_sh.predict(s[6], eps)
+            assert abs(a - b) <= 1e-4 * max(abs(a), 1.0), (eps, a, b)
+        print("TRAIN OK")
+    """, devices=4)
+    assert "TRAIN OK" in out
+
+
+def test_explicit_mesh_argument():
+    """Passing mesh= (no use_mesh context) shards too; sharded=True with
+    no usable mesh raises."""
+    out = run_child("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        s = scientific.field_slices("miranda-vx", count=6, n=64)
+        ebs = [1e-3, 1e-2]
+        ref = np.asarray(P.features_sweep(s, ebs, sharded=False))
+        got = np.asarray(P.features_sweep(s, ebs, mesh=M.make_sweep_mesh()))
+        np.testing.assert_allclose(got, ref, atol=1e-5)
+        try:
+            P.features_sweep(s, ebs, sharded=True)
+        except ValueError as e:
+            print("RAISES", "slices" in str(e))
+    """)
+    assert "RAISES True" in out
+
+
+# ---------------------------------------------------------------- local-only
+# (no subprocess: these exercise the single-device fallbacks in-process)
+
+def test_sharded_helpers_single_device():
+    from repro.core import predictors as P
+    from repro.dist import sweep as DS
+
+    assert DS.active_sweep_mesh(None) is None
+    assert DS._even_bounds(10, 3, 0) == (0, 4)
+    assert DS._even_bounds(10, 3, 1) == (4, 7)
+    assert DS._even_bounds(10, 3, 2) == (7, 10)
+    x = jnp.ones((2, 16, 16))
+    # no mesh anywhere: features_sweep_sharded falls back to the engine
+    got = DS.features_sweep_sharded(x, [1e-2])
+    ref = P.features_sweep(x, [1e-2], sharded=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-7)
+
+
+def test_training_crs_single_process():
+    from repro import compressors as C
+    from repro.core import usecases as UC
+    from repro.data import scientific
+    from repro.dist import sweep as DS
+
+    s = scientific.field_slices("miranda-vx", count=3, n=64)
+    ebs = [1e-3, 1e-2]
+    comp = C.get("sz2")
+    table = DS.training_crs(comp, s, ebs)
+    assert table.shape == (3, 2)
+    want = np.asarray([[comp.cr(sl, e) for e in ebs] for sl in s])
+    np.testing.assert_allclose(table, want, rtol=1e-12)

@@ -1,0 +1,202 @@
+"""Regression tests for the UC1/UC2 hardening fixes: zero-iteration
+bisection, non-positive model outputs, eps validation, int32 code
+saturation, empty UC2 model dicts, and q-ent boundary-eps oracles."""
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import predictors as P, usecases as UC
+from repro.data import scientific
+
+
+@pytest.fixture(scope="module")
+def setup():
+    slices = scientific.field_slices("scale-u", count=8, n=64)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    ebs = [1e-4 * rng, 1e-3 * rng, 1e-2 * rng]
+    gm = UC.EbGridModel.train(slices[:6], "sz2", ebs)
+    return slices, ebs, rng, gm
+
+
+# ------------------------------------------------- UC1 zero-iteration search
+def test_find_error_bound_zero_iters_returns_finite(setup):
+    """max_iters=0 used to NameError on the unbound loop variables."""
+    slices, ebs, rng, gm = setup
+    eps, cr = UC.find_error_bound_for_cr(gm, slices[7], 6.0, max_iters=0)
+    assert np.isfinite(eps) and np.isfinite(cr)
+    assert ebs[0] <= eps <= ebs[-1]
+
+
+def test_find_error_bound_zero_iters_matches_exhaustive_convention(setup):
+    """Like find_error_bound_exhaustive, the degenerate search reports the
+    upper bracket probe."""
+    slices, ebs, rng, gm = setup
+    target = 6.0   # strictly between cr(lo) and cr(hi) for this field
+    cache = P.get_engine(gm.cfg).cached(slices[7])
+    cr_lo = gm.predict(slices[7], ebs[0], cache)
+    cr_hi = gm.predict(slices[7], ebs[-1], cache)
+    assert cr_lo < target < cr_hi, "fixture drifted: pick a bracketed target"
+    eps, cr = UC.find_error_bound_for_cr(gm, slices[7], target, max_iters=0)
+    assert eps == ebs[-1] and cr == pytest.approx(cr_hi)
+
+
+# ------------------------------------------------ non-positive model outputs
+class _ConstModel(NamedTuple):
+    """Stand-in regression whose prediction is a constant (possibly
+    degenerate) value; NamedTuple so predict_fast can trace it."""
+    level: jnp.ndarray
+
+    def predict(self, feats):
+        return jnp.broadcast_to(self.level, (feats.shape[0],))
+
+
+def _degenerate_grid_model(levels, ebs):
+    from repro.core.pipeline import CRPredictor
+    models = [CRPredictor(_ConstModel(jnp.float32(v)), float(e))
+              for v, e in zip(levels, ebs)]
+    return UC.EbGridModel(np.asarray(ebs, np.float64), models, "degenerate")
+
+
+def test_predict_clamps_nonpositive_model_output():
+    """A regression extrapolating to CR <= 0 must not feed np.log a
+    non-positive value (NaN would poison every bisection comparison)."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(32, 32)),
+                    jnp.float32)
+    gm = _degenerate_grid_model([-2.0, 0.0], [1e-3, 1e-1])
+    mid = float(np.exp(0.5 * (np.log(1e-3) + np.log(1e-1))))
+    for eps in (1e-3, mid, 1e-1):
+        cr = gm.predict(x, eps)
+        assert np.isfinite(cr) and cr > 0, (eps, cr)
+
+
+def test_bisection_never_compares_nan():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(32, 32)),
+                    jnp.float32)
+    gm = _degenerate_grid_model([-1.0, jnp.nan], [1e-3, 1e-1])
+    eps, cr = UC.find_error_bound_for_cr(gm, x, 5.0, max_iters=8)
+    assert np.isfinite(eps) and np.isfinite(cr)
+
+
+def test_clamp_keeps_inf_above_any_target():
+    """+inf must clamp to the ceiling (it means 'CR far above target'),
+    not to the floor -- otherwise bisection walks the wrong direction."""
+    assert UC._clamp_cr(float("inf")) == UC._CR_CEIL
+    assert UC._clamp_cr(float("nan")) == UC._CR_FLOOR
+    assert UC._clamp_cr(-3.0) == UC._CR_FLOOR
+    assert UC._clamp_cr(2.5) == 2.5
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(32, 32)),
+                    jnp.float32)
+    gm = _degenerate_grid_model([2.0, jnp.inf], [1e-3, 1e-1])
+    # target above cr(lo)=2 and below the (clamped) cr(hi): the search
+    # must keep probing inside the bracket, not return hi claiming a hit
+    eps, cr = UC.find_error_bound_for_cr(gm, x, 5.0, max_iters=4)
+    assert np.isfinite(cr) and 1e-3 <= eps <= 1e-1
+
+
+# ----------------------------------------------------------- eps validation
+def test_quantized_codes_rejects_nonpositive_eps():
+    x = jnp.ones((8,))
+    with pytest.raises(ValueError, match="positive"):
+        P.quantized_codes(x, 0.0)
+    with pytest.raises(ValueError, match="positive"):
+        P.quantized_codes(x, -1e-3)
+    with pytest.raises(ValueError, match="positive"):
+        P.quantized_entropy(x, 0.0)
+
+
+def test_quantized_entropy_sweep_rejects_nonpositive_eps():
+    x = jnp.ones((2, 64))
+    with pytest.raises(ValueError, match="positive"):
+        P.quantized_entropy_sweep(x, jnp.asarray([1e-3, 0.0]))
+    with pytest.raises(ValueError, match="positive"):
+        P.features_sweep(jnp.ones((2, 16, 16)), [-1.0])
+    from repro.kernels.qent import ops as qent_ops
+    with pytest.raises(ValueError, match="positive"):
+        qent_ops.quantized_entropy_sweep(x, jnp.asarray([0.0]))
+
+
+def test_slice_cache_rejects_nonpositive_eps():
+    cache = P.features_2d_cached(jnp.ones((16, 16)))
+    with pytest.raises(ValueError, match="positive"):
+        cache(0.0)
+
+
+def test_eps_validation_stays_jit_traceable():
+    """Validation must skip traced error bounds even when they arrive
+    wrapped in a list (engine.features builds [eps]) -- the pre-PR entry
+    points were jit-traceable and must stay so."""
+    import jax
+
+    f = jax.jit(lambda x, e: P.get_engine().features(x, e))
+    out = f(jnp.ones((2, 16, 16)), jnp.float32(1e-2))
+    assert out.shape == (2, 2)
+    g = jax.jit(lambda x, e: P.features_sweep(x, [e, 2 * e], sharded=False))
+    assert g(jnp.ones((2, 16, 16)), jnp.float32(1e-2)).shape == (2, 2, 2)
+
+
+# ------------------------------------------------------ int32 code overflow
+def test_quantized_codes_saturate_instead_of_wrapping():
+    x = jnp.asarray([1e30, -1e30, 1.0], jnp.float32)
+    codes = np.asarray(P.quantized_codes(x, 1e-6))
+    # wrapped casts would flip sign; saturation preserves the ordering
+    assert codes[0] == 2147483520 and codes[1] == -2147483648
+    assert codes[0] > codes[2] > codes[1]
+
+
+def test_qent_sweep_extreme_values_match_saturating_oracle():
+    """Sort route with codes beyond int32: must equal the entropy of the
+    saturated codes (and stay finite), not a wrapped histogram."""
+    rng = np.random.default_rng(2)
+    x = np.concatenate([rng.normal(size=62), [1e30, -1e30]])
+    x = jnp.asarray(x[None], jnp.float32)
+    eps = 1e-6
+    got = float(P.quantized_entropy_sweep(x, jnp.asarray([eps]))[0, 0])
+    codes = np.clip(np.floor(np.asarray(x[0], np.float64) / eps),
+                    -2147483648.0, 2147483520.0).astype(np.int64)
+    counts = np.bincount(codes - codes.min())
+    p = counts[counts > 0] / counts.sum()
+    want = float(-(p * np.log2(p)).sum())
+    assert np.isfinite(got)
+    assert abs(got - want) < 1e-3, (got, want)
+
+
+# ------------------------------------------------------------ UC2 empty dict
+def test_best_compressor_empty_models_raises():
+    x = jnp.ones((16, 16))
+    with pytest.raises(ValueError, match="at least one trained model"):
+        UC.best_compressor({}, x, 1e-3)
+
+
+# ------------------------------------------------- q-ent boundary-eps oracle
+@pytest.mark.parametrize("rel_eb", [1.0, 2.0, 1.0 / 65535.0])
+def test_qent_oracle_at_boundary_eps(rel_eb):
+    """Boundary error bounds -- eps spanning the full value range (1-2
+    codes) and eps putting the code range exactly at the histogram size --
+    against an np.bincount oracle, on both the scalar and sweep paths."""
+    slices = scientific.field_slices("miranda-vx", count=2, n=64)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    eps = rel_eb * rng
+    got_sweep = np.asarray(P.quantized_entropy_sweep(
+        slices, jnp.asarray([eps], jnp.float32)))
+    for s in range(slices.shape[0]):
+        flat = np.asarray(slices[s], np.float64).reshape(-1)
+        codes = np.floor(flat / np.float32(eps)).astype(np.int64)
+        counts = np.bincount(codes - codes.min())
+        p = counts[counts > 0] / counts.sum()
+        want = float(-(p * np.log2(p)).sum())
+        got_one = float(P.quantized_entropy(slices[s], eps))
+        assert abs(got_one - want) < 1e-3, (s, got_one, want)
+        assert abs(got_sweep[s, 0] - want) < 1e-3, (s, got_sweep[s, 0], want)
+
+
+def test_qent_huge_eps_zero_entropy():
+    """eps far above the value range: every value lands in one bin (data
+    shifted positive so floor() can't straddle the 0/-1 code boundary)."""
+    slices = scientific.field_slices("miranda-vx", count=2, n=64)
+    slices = slices - jnp.min(slices) + 1.0
+    got = np.asarray(P.quantized_entropy_sweep(
+        slices, jnp.asarray([1e12], jnp.float32)))
+    # telescoping f32 accumulation leaves ~1e-5 of noise around exact 0
+    np.testing.assert_allclose(got, 0.0, atol=1e-4)
