@@ -398,9 +398,27 @@ class SliceCache:
     def prefetch(self, epss) -> jnp.ndarray:
         """Featurize the whole eb grid in one sweep; returns (e, 2)."""
         feats = features_sweep(self._x[None], epss, self._cfg)[0]
-        self._log_ratio = feats[0, 1]
-        for i, eps in enumerate(jnp.asarray(epss).reshape(-1)):
+        return self.seed(epss, feats)
+
+    def seed(self, epss, feats) -> jnp.ndarray:
+        """Preload externally computed features: ``feats[i]`` is the (2,)
+        feature vector of this slice at ``epss[i]``.
+
+        The hook the coalescing sweep service uses to hand a request rows
+        from a shared batched launch (or the cross-request feature cache)
+        instead of featurizing again; the seeded cache is bit-identical to
+        one filled by :meth:`prefetch` because coalesced sweep rows are
+        row-independent.
+        """
+        epss = jnp.asarray(epss).reshape(-1)
+        if len(epss) != len(feats):
+            raise ValueError(
+                f"seed needs one feature row per eb: {len(epss)} ebs vs "
+                f"{len(feats)} rows")
+        for i, eps in enumerate(epss):
             self._memo[self._key(eps)] = feats[i]
+        if len(feats):
+            self._log_ratio = feats[0][1]
         return feats
 
     def __call__(self, eps) -> jnp.ndarray:
@@ -458,8 +476,14 @@ class FeaturizationEngine:
                  sharded: bool | None = None, mesh=None) -> jnp.ndarray:
         return self.sweep(slices, [eps], sharded=sharded, mesh=mesh)[:, 0, :]
 
-    def cached(self, x: jnp.ndarray) -> SliceCache:
-        return SliceCache(x, self.cfg)
+    def cached(self, x: jnp.ndarray, *, features=None, epss=None) -> SliceCache:
+        """Per-slice cache; ``features``/``epss`` pre-seed it with
+        externally supplied feature rows (see :meth:`SliceCache.seed`) so
+        serving layers can reuse coalesced-launch / cross-request results."""
+        c = SliceCache(x, self.cfg)
+        if features is not None:
+            c.seed(epss, features)
+        return c
 
 
 _DEFAULT_ENGINE = FeaturizationEngine()

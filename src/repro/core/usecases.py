@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import pipeline as PL
 from repro.core import predictors as P
+from repro.core.regression import predict_fast
 from repro import compressors as C
 
 
@@ -81,6 +82,14 @@ class EbGridModel:
                 float(eps), model, cfg))
         return EbGridModel(np.asarray(ebs, np.float64), models, compressor, cfg)
 
+    def log_ebs(self) -> np.ndarray:
+        """log of the eb grid, computed once per model (every bisection
+        probe used to recompute it)."""
+        lg = getattr(self, "_log_ebs", None)
+        if lg is None:
+            lg = self._log_ebs = np.log(self.ebs)
+        return lg
+
     def predict(self, data: jnp.ndarray, eps: float,
                 feat_cache=None) -> float:
         """Predicted CR for one slice at an arbitrary eb (log-interp).
@@ -92,7 +101,7 @@ class EbGridModel:
             # featurize under the SAME config the models were trained with
             feat_cache = P.get_engine(self.cfg).cached(data)
         le = np.log(eps)
-        lg = np.log(self.ebs)
+        lg = self.log_ebs()
         if le <= lg[0]:
             i0, i1, t = 0, 0, 0.0
         elif le >= lg[-1]:
@@ -102,7 +111,6 @@ class EbGridModel:
             i0 = i1 - 1
             t = (le - lg[i0]) / (lg[i1] - lg[i0])
         # q-ent is eb-dependent -> evaluate features at the grid ebs
-        from repro.core.regression import predict_fast
         f0 = feat_cache(self.ebs[i0])[None]
         c0 = _clamp_cr(predict_fast(self.models[i0].model, f0)[0])
         if i1 == i0:
@@ -118,17 +126,24 @@ def find_error_bound_for_cr(
     target_cr: float,
     tol: float = 0.02,
     max_iters: int = 32,
+    feat_cache=None,
 ) -> tuple[float, float]:
     """UC1: bisection on log(eps) using the statistical model only.
 
     Returns (eps, predicted_cr).  CR(eps) is monotone nondecreasing, so
     bisection converges; the model evaluation replaces compressor runs.
+
+    ``feat_cache``: an externally supplied eps -> (2,) feature source
+    (e.g. a :class:`predictors.SliceCache` seeded by the coalescing sweep
+    service from a shared batched launch or its cross-request cache); it
+    must already cover the model-grid ebs.  When None, ONE fused sweep up
+    front covers every probe: SVD once, the slice read once, all grid
+    q-ents from a single kernel launch.
     """
-    # Bisection only ever evaluates features at the model-grid ebs, so ONE
-    # fused sweep up front covers every probe: SVD once, the slice read
-    # once, all grid q-ents from a single kernel launch.
-    feat_cache = P.get_engine(grid_model.cfg).cached(data)
-    feat_cache.prefetch(grid_model.ebs)
+    # Bisection only ever evaluates features at the model-grid ebs.
+    if feat_cache is None:
+        feat_cache = P.get_engine(grid_model.cfg).cached(data)
+        feat_cache.prefetch(grid_model.ebs)
 
     lo, hi = float(grid_model.ebs[0]), float(grid_model.ebs[-1])
     cr_lo = grid_model.predict(data, lo, feat_cache)
@@ -188,22 +203,25 @@ def best_compressor(
     models: Dict[str, object],
     data: jnp.ndarray,
     eps: float,
+    feats=None,
 ) -> tuple[str, Dict[str, float]]:
     """UC2: rank compressors by predicted CR; no compressor executions.
 
     ``models``: name -> trained CRPredictor at this eps.  The expensive
     featurization (SVD + q-ent) is shared across compressors -- computed
     once by the engine, fed to every model (the paper's key UC2 cost
-    structure).
+    structure).  ``feats``: an externally supplied (1, 2) feature matrix
+    for ``data`` at ``eps`` (coalescing sweep service / cross-request
+    cache); when None the engine featurizes here.
     """
-    from repro.core.regression import predict_fast
     if not models:
         raise ValueError(
             "best_compressor needs at least one trained model; got an "
             "empty models dict (train CRPredictors per compressor first)")
-    # featurize under the config the models were trained with
-    cfg = next(iter(models.values())).cfg
-    feats = P.get_engine(cfg).features(data[None], eps)
+    if feats is None:
+        # featurize under the config the models were trained with
+        cfg = next(iter(models.values())).cfg
+        feats = P.get_engine(cfg).features(data[None], eps)
     preds = {name: float(predict_fast(m.model, feats)[0])
              for name, m in models.items()}
     return max(preds, key=preds.get), preds

@@ -148,6 +148,85 @@ def features_sweep_sharded(
 
 
 # ---------------------------------------------------------------------------
+# Serve-side coalescing: padded bucketed launches + per-request scatter-back
+# ---------------------------------------------------------------------------
+
+def sweep_padded(
+    slices: jnp.ndarray,
+    epss,
+    cfg=None,
+    *,
+    k_pad: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+) -> jnp.ndarray:
+    """One coalesced sweep launch over a padded request batch.
+
+    The sweep service stacks several requests' slices into one (k, m, n)
+    batch, pads it to a *bucketed* ``k_pad`` (so a small set of compiled
+    executables serves every batch size), and launches once:
+
+    * ``k_pad`` a multiple of the mesh's slice extent -> the ``shard_map``
+      path with ``gather=False`` (each device keeps its shard; no
+      reshard/gather between launch and scatter-back, and the bucket pad
+      doubles as the mesh pad so no second padding happens inside);
+    * otherwise (no mesh, or a bucket below the extent) -> the
+      single-device fused engine.
+
+    Returns the PADDED (k_pad, e, 2) result; rows past the true batch are
+    garbage-by-construction (copies of the last slice) and the caller
+    scatters only real rows back to requests (``scatter_requests``).
+    Every kept row is bit-identical to a single-request launch of that
+    slice because the sweep body is row-independent.
+    """
+    from repro.core import predictors as PRED
+    cfg = cfg if cfg is not None else PRED.PredictorConfig()
+    if slices.ndim != 3:
+        raise ValueError(f"sweep_padded expects (k, m, n), got {slices.shape}")
+    PRED._validate_eps_positive(epss)
+    k = slices.shape[0]
+    k_pad = k if k_pad is None else int(k_pad)
+    if k_pad < k:
+        raise ValueError(f"k_pad={k_pad} smaller than batch k={k}")
+    if k_pad > k:
+        slices = jnp.concatenate(
+            [slices,
+             jnp.broadcast_to(slices[-1:], (k_pad - k,) + slices.shape[1:])],
+            axis=0)
+    epss = jnp.asarray(epss, jnp.float32).reshape(-1)
+    mesh = active_sweep_mesh(mesh)
+    if mesh is not None:
+        ext = S._mesh_extent(mesh, slice_axes(mesh))
+        if k_pad >= ext and k_pad % ext == 0:
+            return features_sweep_sharded(
+                slices, epss, cfg, mesh=mesh, gather=False)
+    return PRED._features_sweep_traced(
+        slices, epss, vf=cfg.variance_fraction_2d, bins=cfg.qent_bins,
+        use_kernels=cfg.use_kernels)
+
+
+def scatter_requests(out, sizes: Sequence[int]) -> list:
+    """Scatter a coalesced (k_pad, e, 2) sweep result back into
+    per-request row blocks.
+
+    ONE host transfer for the whole batch (for the ``gather=False``
+    sharded layout this is the only gather point); ``sizes`` are the
+    per-request row counts in stacking order, and trailing pad rows are
+    dropped.  Returns a list of (sizes[i], e, 2) numpy arrays.
+    """
+    host = np.asarray(out)
+    total = int(np.sum(sizes)) if len(sizes) else 0
+    if total > host.shape[0]:
+        raise ValueError(
+            f"request sizes sum to {total} but the result has only "
+            f"{host.shape[0]} rows")
+    blocks, off = [], 0
+    for s in sizes:
+        blocks.append(host[off:off + s])
+        off += s
+    return blocks
+
+
+# ---------------------------------------------------------------------------
 # Training-side distribution: compressor runs over local slice shards
 # ---------------------------------------------------------------------------
 

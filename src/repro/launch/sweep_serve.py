@@ -1,0 +1,125 @@
+"""Sweep-service launcher: synthetic multi-client UC1/UC2/featurize load.
+
+Drives ``repro.serve.sweep_service.SweepService`` with concurrent client
+threads issuing a mixed request stream over a small set of hot fields --
+the production traffic shape the coalescing layers target -- and prints
+throughput, latency quantiles, and cache/launch statistics.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    python -m repro.launch.sweep_serve --clients 8 --requests 64 --mesh auto
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=64,
+                    help="total requests across all clients")
+    ap.add_argument("--fields", default="miranda-vx,scale-u")
+    ap.add_argument("--hot-slices", type=int, default=4,
+                    help="distinct slices per field the clients hammer")
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--compressor", default="zfp")
+    ap.add_argument("--train-slices", type=int, default=10)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=3.0)
+    ap.add_argument("--cache-bytes", type=int, default=4 << 20)
+    ap.add_argument("--mesh", default=None,
+                    help="'auto' = 1-D all-device sweep mesh")
+    args = ap.parse_args()
+
+    from repro import compressors as C
+    from repro.core import pipeline as PL, usecases as UC
+    from repro.data import scientific
+    from repro.launch import mesh as M
+    from repro.serve.sweep_service import ServiceConfig, SweepService
+
+    mesh = None
+    if args.mesh == "auto" and len(jax.devices()) > 1:
+        mesh = M.make_sweep_mesh()
+    elif args.mesh and args.mesh != "auto":
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh(shape, ("data",) if len(shape) == 1
+                             else ("data", "model"))
+
+    fields = args.fields.split(",")
+    print(f"# training {args.compressor} grid models on {fields} ...")
+    hot, grid_models, uc2_models = {}, {}, {}
+    for f in fields:
+        slices = scientific.field_slices(
+            f, count=args.train_slices + args.hot_slices, n=args.n)
+        rng = float(jnp.max(slices) - jnp.min(slices))
+        ebs = [r * rng for r in (1e-5, 1e-4, 1e-3, 1e-2)]
+        train = slices[:args.train_slices]
+        grid_models[f] = UC.EbGridModel.train(train, args.compressor, ebs)
+        eps = ebs[2]
+        models = {}
+        for name in (args.compressor, "bitgrooming"):
+            comp = C.get(name)
+            crs = jnp.asarray([comp.cr(s, eps) for s in train])
+            models[name] = PL.CRPredictor.train(train, crs, eps)
+        uc2_models[f] = (models, eps)
+        hot[f] = slices[args.train_slices:]
+
+    scfg = ServiceConfig(max_batch_slices=args.max_batch,
+                         max_wait_ms=args.max_wait_ms,
+                         cache_bytes=args.cache_bytes)
+    lat, lock = [], threading.Lock()
+
+    def client(svc, cid: int, count: int):
+        rnd = np.random.default_rng(cid)
+        for i in range(count):
+            f = fields[int(rnd.integers(len(fields)))]
+            x = hot[f][int(rnd.integers(args.hot_slices))]
+            t0 = time.perf_counter()
+            if rnd.random() < 0.5:
+                svc.find_eb(grid_models[f], x,
+                            target_cr=float(rnd.uniform(3.0, 12.0)))
+            else:
+                models, eps = uc2_models[f]
+                svc.best_compressor(models, x, eps)
+            with lock:
+                lat.append(time.perf_counter() - t0)
+
+    per_client = max(1, args.requests // args.clients)
+    with SweepService(scfg, mesh=mesh) as svc:
+        svc.warmup([(args.n, args.n)], grid_sizes=(1, 4),
+                   row_buckets=(1, args.clients))
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(svc, c, per_client))
+                   for c in range(args.clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        stats = svc.stats()
+
+    done = len(lat)
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    print(f"served {done} requests from {args.clients} clients in "
+          f"{wall:.2f}s -> {done / wall:.1f} req/s")
+    print(f"latency p50={np.percentile(lat_ms, 50):.1f}ms "
+          f"p95={np.percentile(lat_ms, 95):.1f}ms "
+          f"max={lat_ms[-1]:.1f}ms")
+    cache = stats["cache"]
+    total_probes = cache["hits"] + cache["misses"]
+    print(f"launches={stats['launches']} rows={stats['rows_launched']} "
+          f"pad_rows={stats['pad_rows']} batches={stats['batches']} "
+          f"executables={stats['executables']}")
+    print(f"cache: hit_rate={cache['hits'] / max(total_probes, 1):.2%} "
+          f"({cache['hits']}/{total_probes}), entries={cache['entries']}, "
+          f"bytes={cache['bytes']}")
+
+
+if __name__ == "__main__":
+    main()

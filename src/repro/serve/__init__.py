@@ -1,0 +1,29 @@
+"""Serving layer: the token engine and the paper's sweep service.
+
+``repro.serve.engine``
+    Batched prefill/decode engine with the UC2-style KV-cache compression
+    gate (predicted CR decides which KV blocks are stored int8).
+
+Sweep service (``repro.serve.sweep_service``)
+    The production entry point for concurrent featurize/UC1/UC2 traffic.
+    One dispatch per request is the naive serving story; the service
+    instead coalesces concurrent requests into single batched launches on
+    a persistent mesh:
+
+    * a micro-batching queue (max batch size + max wait deadline) stacks
+      pending requests' slices along the sweep's slice axis and issues ONE
+      ``dist.sweep`` launch with ``gather=False``, scattering the
+      (k, e, 2) result rows back to per-request futures;
+    * a cross-request feature cache (content hash of slice bytes + engine
+      config -> per-eb feature rows, LRU with a byte budget) lets repeated
+      UC1 bisections and UC2 rankings over hot fields skip featurization
+      entirely;
+    * launches are padded to a small set of bucketed batch shapes so a few
+      persistent jitted executables serve every traffic mix without
+      recompiles.
+
+    Coalesced results are bit-identical to per-request dispatch because
+    the sweep body is row-independent (asserted by
+    ``tests/test_sweep_service.py`` and gated by
+    ``benchmarks/bench_serve.py``).
+"""

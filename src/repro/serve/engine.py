@@ -28,12 +28,19 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig = ServeConfig()):
+    def __init__(self, cfg: ModelConfig, params,
+                 scfg: Optional[ServeConfig] = None):
+        # None sentinel: a dataclass default instance would be shared (and
+        # mutated) across every Engine constructed without a config
+        scfg = scfg if scfg is not None else ServeConfig()
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self._prefill = jax.jit(
             lambda p, batch: M.prefill(p, batch, cfg, scfg.max_len))
         self._decode = jax.jit(
             lambda p, cache, tok, pos: M.decode_step(p, cache, tok, pos, cfg))
+        # all per-leaf gate CRs in ONE device computation, synced once
+        self._gate_crs = jax.jit(lambda leaves: jnp.stack(
+            [predicted_cr_int8(x.astype(jnp.float32)) for x in leaves]))
         self.kv_saved_bytes = 0
         self.kv_total_bytes = 0
 
@@ -42,19 +49,21 @@ class Engine:
         if not self.scfg.kv_compress:
             return cache
 
-        def leaf(x):
-            if x.dtype not in (jnp.bfloat16, jnp.float32) or x.ndim < 4:
-                return x
-            cr = float(predicted_cr_int8(x.astype(jnp.float32)))
+        leaves, tdef = jax.tree.flatten(cache)
+        cand = [i for i, x in enumerate(leaves)
+                if x.dtype in (jnp.bfloat16, jnp.float32) and x.ndim >= 4]
+        if not cand:
+            return cache
+        crs = np.asarray(self._gate_crs(tuple(leaves[i] for i in cand)))
+        for cr, i in zip(crs, cand):
+            x = leaves[i]
             self.kv_total_bytes += x.size * x.dtype.itemsize
-            if cr >= self.scfg.kv_gate_ratio:
+            if float(cr) >= self.scfg.kv_gate_ratio:
                 codes, scales = quantize_int8(x.astype(jnp.float32))
                 self.kv_saved_bytes += int(
                     x.size * x.dtype.itemsize - (codes.size + scales.size * 4))
-                return dequantize_int8(codes, scales, x.shape, x.dtype)
-            return x
-
-        return jax.tree.map(leaf, cache)
+                leaves[i] = dequantize_int8(codes, scales, x.shape, x.dtype)
+        return jax.tree.unflatten(tdef, leaves)
 
     def generate(self, batch: Dict[str, jnp.ndarray], steps: int,
                  greedy: bool = True) -> jnp.ndarray:

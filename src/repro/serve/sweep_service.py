@@ -1,0 +1,470 @@
+"""Request-coalescing sweep service: micro-batching + cross-request cache.
+
+The serving gap this closes: ``find_error_bound_for_cr`` (UC1) and
+``best_compressor`` (UC2) each pay one full featurization dispatch per
+request, and under a mesh each request triggers its own ``shard_map``
+launch.  The paper's speedups assume featurization cost is *amortized*
+across queries, so the service batches the amortization in three layers:
+
+1. **Micro-batching queue** -- concurrent ``submit_*`` calls enqueue; a
+   single worker thread flushes when the pending row count reaches
+   ``max_batch_slices`` or the oldest request has waited ``max_wait_ms``.
+   Every flushed batch becomes ONE ``dist.sweep.sweep_padded`` launch per
+   (slice shape, engine config) group -- ``gather=False`` on the
+   persistent mesh, so devices keep their shards until the single
+   scatter-back transfer -- and the (k, e, 2) rows are scattered to the
+   per-request futures.
+
+2. **Cross-request feature cache** -- content hash of the f32 slice bytes
+   + engine config -> per-error-bound feature rows, LRU with a byte
+   budget.  A repeated UC1 bisection or UC2 ranking over a hot field is
+   served from the cache with ZERO sweep launches.  Within one batch,
+   requests for the same slice are deduplicated before launch and their
+   error-bound grids are unioned into one eps vector (per-eps results are
+   independent, so the union launch is bit-equal to separate ones).
+
+3. **Persistent bucketed executables** -- batches are padded to
+   power-of-two row buckets and a small set of eps-vector lengths, so the
+   jitted sweep executables (keyed by mesh + padded batch shape) are
+   compiled once per bucket and reused for every traffic mix.
+
+Results are bit-identical to per-request serial dispatch: the sweep body
+is row-independent and per-eps-independent, UC1 bisection runs the exact
+``usecases`` code on a seeded ``SliceCache``, and UC2 ranking feeds the
+shared rows through the exact ``best_compressor`` model evaluation.
+
+Usage::
+
+    from repro.serve.sweep_service import SweepService, ServiceConfig
+    with SweepService(mesh=my_mesh) as svc:        # or under use_mesh(...)
+        f1 = svc.submit_find_eb(grid_model, slice_a, target_cr=8.0)
+        f2 = svc.submit_best_compressor(models, slice_b, eps)
+        f3 = svc.submit_featurize(stack, ebs)
+        eps, cr = f1.result()
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import predictors as P
+from repro.core import usecases as UC
+from repro.dist import sweep as DS
+
+
+_EPS_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
+
+
+def _row_bucket(k: int) -> int:
+    """Smallest power-of-two >= k: row buckets are pow2 so any pow2 mesh
+    extent divides every bucket at or above it (the sharded path never
+    needs a second pad)."""
+    b = 1
+    while b < k:
+        b *= 2
+    return b
+
+
+def _eps_bucket(e: int) -> int:
+    for b in _EPS_BUCKETS:
+        if e <= b:
+            return b
+    return -(-e // 16) * 16
+
+
+def _f32(eps) -> float:
+    """Canonical f32 error-bound key (features are computed in f32)."""
+    return float(np.float32(eps))
+
+
+def slice_digest(x) -> str:
+    """Content hash of a slice's f32 bytes (featurization casts to f32,
+    so a float64 array and its f32 round-trip share cache entries)."""
+    arr = np.ascontiguousarray(np.asarray(x, np.float32))
+    h = hashlib.sha1(arr.tobytes())
+    h.update(str(arr.shape).encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    max_batch_slices: int = 64       # flush when this many rows are pending
+    max_wait_ms: float = 2.0         # ... or the oldest request waited this
+    cache_bytes: int = 4 << 20       # cross-request feature-cache budget
+    max_eps_per_launch: int = 32     # chunk wider eps unions across launches
+    pcfg: P.PredictorConfig = dataclasses.field(
+        default_factory=P.PredictorConfig)
+
+
+class FeatureCache:
+    """Cross-request feature cache: (slice digest, engine config) ->
+    {f32 eb -> (2,) feature row}, LRU over slices with a byte budget."""
+
+    ROW_BYTES = 2 * 4
+    ENTRY_OVERHEAD = 128             # digest + dict bookkeeping estimate
+
+    def __init__(self, max_bytes: int):
+        self.max_bytes = int(max_bytes)
+        self._entries: "collections.OrderedDict[tuple, dict]" = \
+            collections.OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._lock = threading.Lock()
+
+    def get(self, key: tuple, eps_key: float) -> Optional[np.ndarray]:
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None or eps_key not in ent:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return ent[eps_key]
+
+    def put(self, key: tuple, eps_key: float, row: np.ndarray) -> None:
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                ent = self._entries[key] = {}
+                self._bytes += self.ENTRY_OVERHEAD
+            if eps_key not in ent:
+                self._bytes += self.ROW_BYTES
+            ent[eps_key] = row
+            self._entries.move_to_end(key)
+            # never evict the slice just written: it may still be needed
+            # to complete the in-flight batch
+            while self._bytes > self.max_bytes and len(self._entries) > 1:
+                _, old = self._entries.popitem(last=False)
+                self._bytes -= self.ENTRY_OVERHEAD + self.ROW_BYTES * len(old)
+                self.evictions += 1
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "entries": len(self),
+                    "bytes": self._bytes}
+
+
+@dataclasses.dataclass
+class _Item:
+    """One slice's launch needs within a request."""
+    key: tuple                       # (digest, engine config)
+    x: np.ndarray                    # (m, n) f32 copy used for the launch
+    eps_keys: Tuple[float, ...]      # f32 ebs this request reads
+
+
+@dataclasses.dataclass
+class _Request:
+    kind: str                        # featurize | find_eb | best_compressor
+    items: List[_Item]
+    future: Future
+    payload: dict
+    t_submit: float
+
+    @property
+    def rows(self) -> int:
+        return len(self.items)
+
+
+class SweepService:
+    """Coalesces concurrent featurize/UC1/UC2 requests into single batched
+    launches on a persistent mesh (module docstring has the full story).
+
+    The mesh is captured at construction (explicit ``mesh=`` argument or
+    the thread's active ``dist.sharding.use_mesh``) and reused for every
+    launch -- the worker thread never depends on the caller's thread-local
+    mesh context.
+    """
+
+    def __init__(self, scfg: Optional[ServiceConfig] = None, *, mesh=None):
+        self.scfg = scfg if scfg is not None else ServiceConfig()
+        self.mesh = DS.active_sweep_mesh(mesh)
+        self.cache = FeatureCache(self.scfg.cache_bytes)
+        self._queue: "collections.deque[_Request]" = collections.deque()
+        self._cond = threading.Condition()
+        self._stop = False
+        self._launches = 0
+        self._rows_launched = 0
+        self._pad_rows = 0
+        self._batches = 0
+        self._requests = collections.Counter()
+        self._executables: set = set()   # (mesh shape, k_pad, m, n, e_pad, cfg)
+        self._worker = threading.Thread(
+            target=self._loop, name="sweep-service", daemon=True)
+        self._worker.start()
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+
+    def submit_featurize(self, slices, epss,
+                         cfg: Optional[P.PredictorConfig] = None) -> Future:
+        """(k, m, n) stack x (e,) ebs -> Future[(k, e, 2) np.ndarray],
+        bit-equal to ``features_sweep(slices, epss)``."""
+        cfg = cfg if cfg is not None else self.scfg.pcfg
+        arr = np.asarray(slices, np.float32)
+        if arr.ndim != 3:
+            raise ValueError(
+                f"submit_featurize expects (k, m, n), got {arr.shape}")
+        eps_keys = tuple(_f32(e) for e in np.asarray(epss).reshape(-1))
+        if not eps_keys:
+            raise ValueError("submit_featurize needs at least one eb")
+        items = [_Item((slice_digest(s), cfg), s, eps_keys) for s in arr]
+        return self._submit(_Request(
+            "featurize", items, Future(),
+            {"eps_keys": eps_keys}, time.perf_counter()))
+
+    def submit_find_eb(self, grid_model, data, target_cr: float,
+                       tol: float = 0.02, max_iters: int = 32) -> Future:
+        """UC1 through the service: Future[(eps, predicted_cr)], bit-equal
+        to ``usecases.find_error_bound_for_cr``.  The grid featurization
+        comes from the shared launch / cross-request cache."""
+        cfg = grid_model.cfg
+        x = np.asarray(data, np.float32)
+        if x.ndim != 2:
+            # validate at submit time: a worker-side failure would poison
+            # the whole coalesced batch, not just this request
+            raise ValueError(f"submit_find_eb expects a 2-D slice, "
+                             f"got {x.shape}")
+        eps_keys = tuple(_f32(e) for e in np.asarray(grid_model.ebs))
+        item = _Item((slice_digest(x), cfg), x, eps_keys)
+        return self._submit(_Request(
+            "find_eb", [item], Future(),
+            {"grid_model": grid_model, "data": data, "target_cr": target_cr,
+             "tol": tol, "max_iters": max_iters}, time.perf_counter()))
+
+    def submit_best_compressor(self, models: Dict[str, object], data,
+                               eps: float) -> Future:
+        """UC2 through the service: Future[(best_name, preds)], bit-equal
+        to ``usecases.best_compressor``."""
+        if not models:
+            raise ValueError("submit_best_compressor needs trained models")
+        cfg = next(iter(models.values())).cfg
+        x = np.asarray(data, np.float32)
+        if x.ndim != 2:
+            raise ValueError(f"submit_best_compressor expects a 2-D slice, "
+                             f"got {x.shape}")
+        item = _Item((slice_digest(x), cfg), x, (_f32(eps),))
+        return self._submit(_Request(
+            "best_compressor", [item], Future(),
+            {"models": models, "data": data, "eps": eps},
+            time.perf_counter()))
+
+    # sync conveniences ------------------------------------------------
+
+    def featurize(self, slices, epss, cfg=None) -> np.ndarray:
+        return self.submit_featurize(slices, epss, cfg).result()
+
+    def find_eb(self, grid_model, data, target_cr, **kw) -> tuple:
+        return self.submit_find_eb(grid_model, data, target_cr, **kw).result()
+
+    def best_compressor(self, models, data, eps) -> tuple:
+        return self.submit_best_compressor(models, data, eps).result()
+
+    def stats(self) -> dict:
+        return {"launches": self._launches,
+                "rows_launched": self._rows_launched,
+                "pad_rows": self._pad_rows,
+                "batches": self._batches,
+                "executables": len(self._executables),
+                "requests": dict(self._requests),
+                "cache": self.cache.stats()}
+
+    @property
+    def launches(self) -> int:
+        return self._launches
+
+    def warmup(self, shapes: Sequence[Tuple[int, int]],
+               grid_sizes: Sequence[int] = (1,),
+               row_buckets: Sequence[int] = (1,),
+               cfg: Optional[P.PredictorConfig] = None) -> None:
+        """Pre-compile the bucketed executables for the expected traffic
+        (slice shapes x eps-grid sizes x row buckets) so first requests
+        don't pay compile latency."""
+        cfg = cfg if cfg is not None else self.scfg.pcfg
+        for m, n in shapes:
+            x = np.zeros((1, m, n), np.float32)
+            for e in grid_sizes:
+                for k in row_buckets:
+                    k_pad, e_pad = _row_bucket(k), _eps_bucket(e)
+                    out = DS.sweep_padded(
+                        jnp.asarray(x), np.full((e_pad,), 1.0, np.float32),
+                        cfg, k_pad=k_pad, mesh=self.mesh)
+                    np.asarray(out)
+                    self._executables.add(self._sig(k_pad, (m, n), e_pad, cfg))
+
+    def close(self) -> None:
+        """Flush pending requests and stop the worker thread."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+        self._worker.join()
+
+    def __enter__(self) -> "SweepService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # worker: micro-batching loop
+    # ------------------------------------------------------------------
+
+    def _submit(self, req: _Request) -> Future:
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("SweepService is closed")
+            self._queue.append(req)
+            self._requests[req.kind] += 1
+            self._cond.notify_all()
+        return req.future
+
+    def _loop(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            try:
+                self._process(batch)
+            except Exception as exc:  # fail the whole batch, not the server
+                for req in batch:
+                    if not req.future.done():
+                        req.future.set_exception(exc)
+
+    def _next_batch(self) -> Optional[List[_Request]]:
+        """Block until a batch is ready: pending rows reach
+        ``max_batch_slices``, or the OLDEST pending request has waited
+        ``max_wait_ms`` (a single request flushes alone at the deadline),
+        or the service is closing (drains what is left)."""
+        with self._cond:
+            while True:
+                if self._queue:
+                    rows = sum(r.rows for r in self._queue)
+                    deadline = (self._queue[0].t_submit +
+                                self.scfg.max_wait_ms / 1e3)
+                    remaining = deadline - time.perf_counter()
+                    if (rows >= self.scfg.max_batch_slices or
+                            remaining <= 0 or self._stop):
+                        batch, total = [], 0
+                        while self._queue and (
+                                total < self.scfg.max_batch_slices or
+                                not batch):
+                            req = self._queue.popleft()
+                            batch.append(req)
+                            total += req.rows
+                        return batch
+                    self._cond.wait(timeout=remaining)
+                elif self._stop:
+                    return None
+                else:
+                    self._cond.wait()
+
+    # ------------------------------------------------------------------
+    # worker: coalesced launch + scatter-back + request completion
+    # ------------------------------------------------------------------
+
+    def _sig(self, k_pad: int, shape: Tuple[int, int], e_pad: int,
+             cfg: P.PredictorConfig) -> tuple:
+        mesh_key = (None if self.mesh is None
+                    else (self.mesh.axis_names, self.mesh.devices.shape))
+        return (mesh_key, k_pad, shape, e_pad, cfg)
+
+    def _process(self, batch: List[_Request]) -> None:
+        self._batches += 1
+        # 1. resolve the cross-request cache; group the misses by
+        #    (slice shape, engine config) and dedup identical slices,
+        #    unioning the error bounds each digest needs
+        local: Dict[Tuple[tuple, float], np.ndarray] = {}
+        need: Dict[tuple, dict] = {}
+        for req in batch:
+            for it in req.items:
+                for ek in it.eps_keys:
+                    if (it.key, ek) in local:
+                        continue
+                    row = self.cache.get(it.key, ek)
+                    if row is not None:
+                        local[(it.key, ek)] = row
+                    else:
+                        group = need.setdefault((it.x.shape, it.key[1]), {})
+                        entry = group.setdefault(it.key, (it.x, set()))
+                        entry[1].add(ek)
+        # 2. ONE launch per (shape, config) group (eps unions wider than
+        #    max_eps_per_launch are chunked)
+        for (shape, cfg), digests in need.items():
+            union = sorted({e for _, es in digests.values() for e in es})
+            step = self.scfg.max_eps_per_launch
+            for lo in range(0, len(union), step):
+                self._launch(digests, union[lo:lo + step], cfg, local)
+        # 3. complete every request from the batch-local rows
+        for req in batch:
+            try:
+                req.future.set_result(self._finish(req, local))
+            except Exception as exc:
+                req.future.set_exception(exc)
+
+    def _launch(self, digests: dict, eps_chunk: List[float],
+                cfg: P.PredictorConfig,
+                local: Dict[Tuple[tuple, float], np.ndarray]) -> None:
+        order = list(digests)
+        stack = jnp.asarray(np.stack([digests[key][0] for key in order]))
+        k = len(order)
+        k_pad = _row_bucket(k)
+        e_pad = _eps_bucket(len(eps_chunk))
+        epss = np.asarray(
+            eps_chunk + [eps_chunk[-1]] * (e_pad - len(eps_chunk)),
+            np.float32)
+        out = DS.sweep_padded(stack, epss, cfg, k_pad=k_pad, mesh=self.mesh)
+        # scatter-back: ONE host transfer for the whole coalesced batch,
+        # split into per-digest row blocks (pad rows dropped)
+        blocks = DS.scatter_requests(out, [1] * k)
+        for key, block in zip(order, blocks):
+            for j, ek in enumerate(eps_chunk):
+                # owned copy: a view would pin the whole (k_pad, e_pad, 2)
+                # batch result in memory for the row's cache lifetime
+                row = np.array(block[0, j])
+                local[(key, ek)] = row
+                self.cache.put(key, ek, row)
+        self._launches += 1
+        self._rows_launched += k
+        self._pad_rows += k_pad - k
+        self._executables.add(self._sig(k_pad, stack.shape[1:], e_pad, cfg))
+
+    def _finish(self, req: _Request,
+                local: Dict[Tuple[tuple, float], np.ndarray]):
+        def rows_for(item: _Item) -> np.ndarray:
+            return np.stack([local[(item.key, ek)] for ek in item.eps_keys])
+
+        if req.kind == "featurize":
+            return np.stack([rows_for(it) for it in req.items])
+        if req.kind == "find_eb":
+            gm = req.payload["grid_model"]
+            feats = rows_for(req.items[0])                      # (e, 2)
+            feat_cache = P.get_engine(gm.cfg).cached(
+                req.payload["data"], features=feats, epss=gm.ebs)
+            return UC.find_error_bound_for_cr(
+                gm, req.payload["data"], req.payload["target_cr"],
+                tol=req.payload["tol"], max_iters=req.payload["max_iters"],
+                feat_cache=feat_cache)
+        if req.kind == "best_compressor":
+            feats = rows_for(req.items[0])                      # (1, 2)
+            return UC.best_compressor(
+                req.payload["models"], req.payload["data"],
+                req.payload["eps"], feats=feats)
+        raise ValueError(f"unknown request kind {req.kind!r}")

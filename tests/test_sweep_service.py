@@ -1,0 +1,265 @@
+"""Sweep-service tests: coalescing correctness (bit-equal to serial
+dispatch, mixed slice shapes), cross-request cache hit/eviction semantics,
+deadline flush, in-batch dedup, and the dist.sweep scatter-back path.
+
+Runs on a single device (tier-1) and under the multi-device CI job
+(XLA_FLAGS=--xla_force_host_platform_device_count=8), where the coalesced
+launches shard over the mesh.
+"""
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import compressors as C
+from repro.core import pipeline as PL, predictors as P, usecases as UC
+from repro.data import scientific
+from repro.dist import sweep as DS
+from repro.serve.sweep_service import (
+    FeatureCache, ServiceConfig, SweepService, _eps_bucket, _row_bucket,
+    slice_digest)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    slices = scientific.field_slices("scale-u", count=16, n=96)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    ebs = [1e-5 * rng, 1e-4 * rng, 1e-3 * rng, 1e-2 * rng]
+    gm = UC.EbGridModel.train(slices[:10], "zfp", ebs)
+    eps = ebs[2]
+    models = {}
+    for name in ("zfp", "bitgrooming"):
+        comp = C.get(name)
+        crs = jnp.asarray([comp.cr(s, eps) for s in slices[:10]])
+        models[name] = PL.CRPredictor.train(slices[:10], crs, eps)
+    return slices, ebs, gm, eps, models
+
+
+def test_coalesced_bitequal_serial_mixed_shapes(setup):
+    """N concurrent mixed requests (two slice shapes) == N serial calls."""
+    slices, ebs, gm, eps, models = setup
+    small = scientific.field_slices("scale-u", count=2, seed=3, n=64)
+    test = slices[12]
+
+    # serial references (today's per-request dispatch)
+    s_uc1 = UC.find_error_bound_for_cr(gm, test, 6.0)
+    s_uc2 = UC.best_compressor(models, test, eps)
+    s_feat = np.asarray(P.features_sweep(slices[13:15], ebs))
+    s_feat_small = np.asarray(P.features_sweep(small, [eps]))
+
+    with SweepService(ServiceConfig(max_wait_ms=50.0)) as svc:
+        futs = [svc.submit_find_eb(gm, test, 6.0),
+                svc.submit_best_compressor(models, test, eps),
+                svc.submit_featurize(slices[13:15], ebs),
+                svc.submit_featurize(small, [eps])]
+        c_uc1, c_uc2, c_feat, c_feat_small = [
+            f.result(timeout=120) for f in futs]
+        stats = svc.stats()
+
+    assert c_uc1 == s_uc1
+    assert c_uc2[0] == s_uc2[0] and c_uc2[1] == s_uc2[1]
+    assert np.array_equal(c_feat, s_feat)
+    assert np.array_equal(c_feat_small, s_feat_small)
+    # two shape groups -> exactly two coalesced launches for the batch
+    assert stats["launches"] == 2
+    # 1 UC1 slice (UC2 deduped onto it) + 2 featurize + 2 small = 5 rows
+    assert stats["rows_launched"] == 5
+
+
+def test_concurrent_clients_bitequal(setup):
+    """Requests submitted from many client threads at once match serial."""
+    slices, ebs, gm, eps, models = setup
+    tests = [slices[11], slices[12], slices[13]]
+    targets = [4.0, 6.0, 9.0]
+    serial = [UC.find_error_bound_for_cr(gm, x, t)
+              for x, t in zip(tests, targets)]
+    serial += [UC.best_compressor(models, x, eps) for x in tests]
+
+    results = [None] * 6
+    with SweepService(ServiceConfig(max_wait_ms=50.0)) as svc:
+        def uc1(i):
+            results[i] = svc.find_eb(gm, tests[i], targets[i])
+
+        def uc2(i):
+            results[3 + i] = svc.best_compressor(models, tests[i], eps)
+
+        threads = [threading.Thread(target=uc1, args=(i,)) for i in range(3)]
+        threads += [threading.Thread(target=uc2, args=(i,)) for i in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert results == serial
+
+
+def test_cache_hit_second_uc1_zero_launches(setup):
+    slices, ebs, gm, eps, models = setup
+    test = slices[11]
+    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+        first = svc.find_eb(gm, test, 6.0)
+        launches = svc.launches
+        assert launches >= 1
+        second = svc.find_eb(gm, test, 6.0)
+        # the whole grid came from the cross-request cache: ZERO launches
+        assert svc.launches == launches
+        assert second == first
+        # UC2 at a grid eb on the same field also rides the cache
+        svc.best_compressor(models, test, eps)
+        assert svc.launches == launches
+        assert svc.stats()["cache"]["hits"] >= len(ebs) + 1
+
+
+def test_dedup_within_batch(setup):
+    slices, ebs, gm, eps, models = setup
+    x = slices[14]
+    with SweepService(ServiceConfig(max_wait_ms=200.0,
+                                    max_batch_slices=64)) as svc:
+        # same slice content from two different requests in one batch
+        f1 = svc.submit_featurize(np.asarray(x)[None], ebs)
+        f2 = svc.submit_featurize(np.asarray(x)[None], ebs)
+        r1, r2 = f1.result(timeout=120), f2.result(timeout=120)
+        stats = svc.stats()
+    assert np.array_equal(r1, r2)
+    assert stats["launches"] == 1
+    assert stats["rows_launched"] == 1          # deduplicated before launch
+
+
+def test_deadline_flush_single_pending_request(setup):
+    slices, ebs, gm, eps, models = setup
+    scfg = ServiceConfig(max_batch_slices=64, max_wait_ms=30.0)
+    with SweepService(scfg) as svc:
+        fut = svc.submit_featurize(slices[11:12], [ebs[0]])
+        # nothing else arrives: the deadline must flush the lone request
+        out = fut.result(timeout=120)
+        stats = svc.stats()
+    assert out.shape == (1, 1, 2)
+    assert stats["batches"] == 1 and stats["launches"] == 1
+    assert np.array_equal(out, np.asarray(
+        P.features_sweep(slices[11:12], [ebs[0]])))
+
+
+def test_submit_after_close_raises(setup):
+    slices, ebs, gm, eps, models = setup
+    svc = SweepService(ServiceConfig(max_wait_ms=1.0))
+    svc.close()
+    with pytest.raises(RuntimeError):
+        svc.submit_featurize(slices[11:12], [ebs[0]])
+
+
+def test_feature_cache_lru_eviction():
+    row = np.zeros(2, np.float32)
+    overhead = FeatureCache.ENTRY_OVERHEAD + FeatureCache.ROW_BYTES
+    cache = FeatureCache(max_bytes=2 * overhead)      # fits two entries
+    ka, kb, kc = ("a", None), ("b", None), ("c", None)
+    cache.put(ka, 1.0, row)
+    cache.put(kb, 1.0, row)
+    assert cache.get(ka, 1.0) is not None             # touch A: B is LRU
+    cache.put(kc, 1.0, row)                           # evicts B
+    assert cache.get(kb, 1.0) is None
+    assert cache.get(ka, 1.0) is not None
+    assert cache.get(kc, 1.0) is not None
+    assert cache.evictions == 1
+    stats = cache.stats()
+    assert stats["entries"] == 2
+    assert stats["bytes"] <= 2 * overhead
+
+
+def test_feature_cache_never_evicts_last_written():
+    cache = FeatureCache(max_bytes=1)                 # below one entry
+    cache.put(("a", None), 1.0, np.zeros(2, np.float32))
+    assert cache.get(("a", None), 1.0) is not None    # still served
+
+
+def test_slice_digest_f32_canonical():
+    x64 = np.random.default_rng(0).standard_normal((8, 8))
+    assert slice_digest(x64) == slice_digest(x64.astype(np.float32))
+    assert slice_digest(x64) != slice_digest(x64.T.copy())
+    # shape participates: same bytes, different shape -> different digest
+    assert slice_digest(x64) != slice_digest(x64.reshape(4, 16))
+
+
+def test_buckets():
+    assert [_row_bucket(k) for k in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert [_eps_bucket(e) for e in (1, 5, 6, 7, 33)] == [1, 6, 6, 8, 48]
+
+
+def test_sweep_padded_and_scatter(setup):
+    slices, ebs, gm, eps, models = setup
+    stack = slices[10:13]                             # k=3
+    epss = np.asarray(ebs, np.float32)
+    ref = np.asarray(P.features_sweep(stack, epss, sharded=False))
+    out = DS.sweep_padded(stack, epss, k_pad=8)
+    assert out.shape == (8, len(ebs), 2)
+    assert np.array_equal(np.asarray(out)[:3], ref)   # pad rows after real
+    blocks = DS.scatter_requests(out, [1, 2])
+    assert np.array_equal(blocks[0], ref[:1])
+    assert np.array_equal(blocks[1], ref[1:3])
+    with pytest.raises(ValueError):
+        DS.scatter_requests(out, [9])                 # more rows than exist
+    with pytest.raises(ValueError):
+        DS.sweep_padded(stack, epss, k_pad=2)         # k_pad below batch
+
+
+def test_sweep_padded_sharded_matches_single_device(setup):
+    """Under a multi-device mesh the padded gather=False launch keeps
+    bit-equality with the single-device engine row for row."""
+    slices, ebs, gm, eps, models = setup
+    if len(jax.devices()) < 2:
+        pytest.skip("single-device host")
+    from repro.launch import mesh as M
+    mesh = M.make_sweep_mesh()
+    ext = len(jax.devices())
+    stack = scientific.field_slices("scale-u", count=ext, seed=7, n=96)
+    epss = np.asarray(ebs, np.float32)
+    ref = np.asarray(P.features_sweep(stack, epss, sharded=False))
+    out = DS.sweep_padded(stack, epss, k_pad=ext, mesh=mesh)
+    assert np.array_equal(np.asarray(out), ref)
+    # ragged batch: real rows of a padded sharded launch still match
+    ragged = stack[:ext - 1]
+    out2 = np.asarray(DS.sweep_padded(ragged, epss, k_pad=ext, mesh=mesh))
+    assert np.array_equal(out2[:ext - 1], ref[:ext - 1])
+
+
+def test_eps_union_rows_bitequal(setup):
+    """Per-eps results are independent: a row featurized at an eb union
+    equals the same row featurized at each eb alone (what in-batch eps
+    unioning relies on)."""
+    slices, ebs, gm, eps, models = setup
+    stack = slices[10:11]
+    union = np.asarray(ebs, np.float32)
+    full = np.asarray(P.features_sweep(stack, union))
+    for i, e in enumerate(union):
+        alone = np.asarray(P.features_sweep(stack, [e]))
+        assert np.array_equal(full[:, i:i + 1], alone)
+
+
+def test_submit_validation(setup):
+    """Malformed requests fail at submit time (a worker-side failure would
+    poison the whole coalesced batch) and eps<=0 is rejected on every
+    sweep_padded route."""
+    slices, ebs, gm, eps, models = setup
+    with SweepService(ServiceConfig(max_wait_ms=1.0)) as svc:
+        with pytest.raises(ValueError):
+            svc.submit_find_eb(gm, slices[10:12], 6.0)      # 3-D data
+        with pytest.raises(ValueError):
+            svc.submit_best_compressor(models, slices[10:12], eps)
+        with pytest.raises(ValueError):
+            svc.submit_featurize(slices[10], ebs)           # 2-D stack
+        with pytest.raises(ValueError):
+            svc.submit_featurize(slices[10:12], [])         # no ebs
+    with pytest.raises(ValueError):
+        DS.sweep_padded(slices[10:12], [0.0])               # eps <= 0
+    with pytest.raises(ValueError):
+        DS.sweep_padded(slices[10:12], [-1e-3], k_pad=8)
+
+
+def test_cached_rows_are_owned_copies(setup):
+    """Cache rows must not be views pinning the whole batch result."""
+    slices, ebs, gm, eps, models = setup
+    with SweepService(ServiceConfig(max_wait_ms=1.0)) as svc:
+        svc.featurize(slices[10:11], ebs)
+        [entry] = list(svc.cache._entries.values())
+        for row in entry.values():
+            assert row.base is None

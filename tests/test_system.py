@@ -102,3 +102,46 @@ def test_paper_pipeline_feeds_gradient_gate():
         real.append(g.size / len(zstandard.ZstdCompressor().compress(
             codes.tobytes())))
     assert np.argsort(pred).tolist() == np.argsort(real).tolist(), (pred, real)
+
+
+def test_engine_default_scfg_not_shared():
+    """Engines built without an explicit ServeConfig must not share one
+    mutable default instance."""
+    cfg = get_smoke("granite-3-2b")
+    params = TS.init_state(cfg, KEY).params
+    e1, e2 = Engine(cfg, params), Engine(cfg, params)
+    assert e1.scfg is not e2.scfg
+    e1.scfg.kv_compress = True
+    assert not e2.scfg.kv_compress
+
+
+def test_kv_gate_batched_matches_per_leaf_reference():
+    """The single-sync batched KV gate computes the same tree as the old
+    one-host-sync-per-leaf implementation."""
+    from repro.train.grad_compress import (predicted_cr_int8, quantize_int8,
+                                           dequantize_int8)
+    cfg = get_smoke("granite-3-2b")
+    params = TS.init_state(cfg, KEY).params
+    eng = Engine(cfg, params, ServeConfig(kv_compress=True,
+                                          kv_gate_ratio=2.0))
+    smooth = (jnp.ones((1, 2, 8, 256), jnp.float32) *
+              jnp.linspace(0.0, 1.0, 256))
+    noisy = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 8, 256),
+                              jnp.float32)
+    cache = {"k": smooth, "v": noisy, "pos": jnp.zeros((3,), jnp.int32)}
+
+    out = eng._maybe_compress_cache(cache)
+
+    def ref_leaf(x):
+        if x.dtype not in (jnp.bfloat16, jnp.float32) or x.ndim < 4:
+            return x
+        cr = float(predicted_cr_int8(x.astype(jnp.float32)))
+        if cr >= 2.0:
+            codes, scales = quantize_int8(x.astype(jnp.float32))
+            return dequantize_int8(codes, scales, x.shape, x.dtype)
+        return x
+
+    ref = jax.tree.map(ref_leaf, cache)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert eng.kv_total_bytes == smooth.size * 4 + noisy.size * 4
