@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import json
 import os
-import subprocess
 import sys
 import tempfile
 
@@ -69,17 +68,8 @@ def main() -> dict:
     with tempfile.TemporaryDirectory() as tmp:
         for d in DEVICE_COUNTS:
             prefix = os.path.join(tmp, f"dev{d}")
-            env = dict(os.environ)
-            env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
-            env["PYTHONPATH"] = os.pathsep.join(
-                [os.path.join(os.path.dirname(__file__), "..", "src"),
-                 os.path.dirname(os.path.dirname(__file__)),
-                 env.get("PYTHONPATH", "")])
-            proc = subprocess.run(
-                [sys.executable, "-m", "benchmarks.bench_sweep_sharded",
-                 "--child", str(d), prefix],
-                env=env, capture_output=True, text=True, timeout=560)
-            assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+            common.run_child_module(
+                "benchmarks.bench_sweep_sharded", ["--child", d, prefix], d)
             with open(prefix + ".json") as f:
                 results[d] = json.load(f)
             results[d]["full"] = np.load(prefix + ".full.npy")

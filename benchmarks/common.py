@@ -68,6 +68,28 @@ def crs_for(comp: str, field: str, count: int, n: int, eps: float):
                        for i in range(count)])
 
 
+def run_child_module(module: str, args, num_devices: int,
+                     timeout: int = 560):
+    """Run ``python -m module *args`` in a child interpreter with
+    ``num_devices`` virtual CPU devices (jax locks the device count at
+    first init, so multi-device benchmark configurations cannot run in
+    the parent).  Asserts a zero exit and returns the CompletedProcess.
+    """
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={num_devices}"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         os.path.dirname(os.path.dirname(__file__)),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, "-m", module, *map(str, args)],
+                          env=env, capture_output=True, text=True,
+                          timeout=timeout)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc
+
+
 def save_json(name: str, obj):
     with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
         json.dump(obj, f, indent=1, default=str)

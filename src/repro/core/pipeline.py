@@ -47,12 +47,14 @@ def featurize_slices(
     sharded: bool | None = None,
     mesh=None,
 ) -> jnp.ndarray:
-    """(k, m, n) stack of 2-D slices -> (k, 2) predictor matrix.
+    """(k, m, n) stack of 2-D slices -- or (k, d, m, n) stack of volumes
+    -- -> (k, 2) predictor matrix.
 
     Routed through the batched sweep engine (single-eb column): one
-    batched Gram + eigvalsh for all k slices instead of k separate solves.
-    Under an active mesh (or explicit ``mesh``) the slice axis is sharded
-    across devices; ``sharded=False`` pins the single-device path.
+    batched Gram + eigvalsh for all k slices instead of k separate solves
+    (volumes: one batched Gram + eigvalsh per HOSVD mode).  Under an
+    active mesh (or explicit ``mesh``) the slice axis is sharded across
+    devices; ``sharded=False`` pins the single-device path.
     """
     return P.get_engine(cfg).features(slices, eps, sharded=sharded, mesh=mesh)
 
@@ -66,8 +68,9 @@ def featurize_sweep(
     mesh=None,
     gather: bool = True,
 ) -> jnp.ndarray:
-    """(k, m, n) stack x (e,) error bounds -> (k, e, 2) predictor tensor
-    in one pass over the data (see ``predictors.FeaturizationEngine``).
+    """(k, m, n) slice stack or (k, d, m, n) volume stack x (e,) error
+    bounds -> (k, e, 2) predictor tensor in one pass over the data (see
+    ``predictors.FeaturizationEngine``).
 
     Shards the slice axis over an active (or passed) mesh; ``gather=False``
     keeps the padded result sharded for distributed downstream stages.
@@ -140,10 +143,13 @@ class CRPredictor:
         cfg: P.PredictorConfig = P.PredictorConfig(),
         ndim: int = 2,
     ) -> "CRPredictor":
-        if ndim == 2:
-            feats = featurize_slices(slices, eps, cfg)
-        else:
-            feats = jnp.stack([P.features_3d(s, eps, cfg) for s in slices])
+        if slices.ndim != ndim + 1:
+            raise ValueError(
+                f"CRPredictor.train(ndim={ndim}) expects a rank-{ndim + 1} "
+                f"stack, got {slices.shape}")
+        # both ranks route through the batched sweep engine (the 3-D path
+        # dispatches to hosvd_trunc_batch -- no per-volume Python loop)
+        feats = featurize_slices(slices, eps, cfg)
         return CRPredictor.train_from_features(feats, cr, eps, model, cfg, ndim)
 
     @staticmethod
@@ -164,8 +170,9 @@ class CRPredictor:
         return self.model.predict(feats)
 
     def predict(self, slices: jnp.ndarray) -> jnp.ndarray:
-        if self.ndim == 2:
-            feats = featurize_slices(slices, self.eps, self.cfg)
-        else:
-            feats = jnp.stack([P.features_3d(s, self.eps, self.cfg) for s in slices])
+        if slices.ndim != self.ndim + 1:
+            raise ValueError(
+                f"CRPredictor(ndim={self.ndim}).predict expects a "
+                f"rank-{self.ndim + 1} stack, got {slices.shape}")
+        feats = featurize_slices(slices, self.eps, self.cfg)
         return self.model.predict(feats)

@@ -37,24 +37,6 @@ DEFAULT_VARIANCE_FRACTION_3D = 0.90
 # SVD truncation level (2-D)
 # ---------------------------------------------------------------------------
 
-def _gram_singular_values_sq(x: jnp.ndarray, use_kernel: bool = False) -> jnp.ndarray:
-    """Squared singular values of ``x`` via the Gram matrix of the smaller side.
-
-    For an (m, n) matrix the nonzero singular values of X equal the square
-    roots of the eigenvalues of X^T X (n x n) or X X^T (m x m); we pick the
-    smaller Gram matrix.  eigvalsh is ascending; we return descending.
-    """
-    m, n = x.shape
-    if use_kernel:  # Pallas tiled Gram (TPU path); imported lazily.
-        from repro.kernels.gram import ops as gram_ops
-        g = gram_ops.gram(x, transpose=m >= n)
-    else:
-        g = x.T @ x if m >= n else x @ x.T
-    ev = jnp.linalg.eigvalsh(g)
-    ev = jnp.maximum(ev, 0.0)
-    return ev[::-1]
-
-
 def svd_trunc(
     x: jnp.ndarray,
     variance_fraction: float = DEFAULT_VARIANCE_FRACTION_2D,
@@ -75,34 +57,69 @@ def svd_trunc(
 # HOSVD truncation level (3-D)
 # ---------------------------------------------------------------------------
 
-def _unfold(x: jnp.ndarray, mode: int) -> jnp.ndarray:
-    """Mode-``mode`` unfolding: fibers of dimension ``mode`` become columns."""
-    return jnp.moveaxis(x, mode, 0).reshape(x.shape[mode], -1)
+def _unfold_batch(x: jnp.ndarray, mode: int) -> jnp.ndarray:
+    """Mode-``mode`` unfolding of every tensor in a (k, ...) stack: fibers
+    of (per-tensor) dimension ``mode`` become columns -> (k, dims[mode], -1).
+    """
+    return jnp.moveaxis(x, 1 + mode, 1).reshape(x.shape[0], x.shape[1 + mode], -1)
+
+
+def hosvd_trunc_batch(
+    vols: jnp.ndarray,
+    variance_fraction: float = DEFAULT_VARIANCE_FRACTION_3D,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """``hosvd_trunc`` for a (k, d, m, n) stack of volumes (any rank >= 4):
+    per-mode unfoldings computed as ONE batched Gram + batched ``eigvalsh``
+    per mode, instead of the per-mode/per-volume Python loops.
+
+    Each volume is mean-corrected by its own global mean (the same
+    correction the scalar path applies), and a zero-variance mode (constant
+    volume) yields fraction 1/p -- the ``jnp.where(total > 0, ..., 1.0)``
+    guard ``svd_trunc_batch`` uses -- so the result stays in (0, 1].
+    Returns a (k,) vector: the mean fraction across modes per volume.
+    """
+    if vols.ndim < 4:
+        raise ValueError(
+            f"hosvd_trunc_batch expects a (k, d, m, n) volume stack "
+            f"(rank >= 4), got {vols.shape}; wrap one volume as x[None]")
+    x = vols.astype(jnp.float32)
+    x = x - jnp.mean(x, axis=tuple(range(1, x.ndim)), keepdims=True)
+    fracs = []
+    for mode in range(x.ndim - 1):
+        u = _unfold_batch(x, mode)
+        _, p, q = u.shape
+        if use_kernel:
+            from repro.kernels.gram import ops as gram_ops
+            g = gram_ops.gram_batched(u, transpose=p >= q)
+        else:
+            g = (jnp.einsum("kai,kaj->kij", u, u) if p >= q
+                 else jnp.einsum("kia,kja->kij", u, u))
+        ev = jnp.maximum(jnp.linalg.eigvalsh(g), 0.0)[:, ::-1]   # descending
+        total = jnp.sum(ev, axis=1, keepdims=True)
+        cum = jnp.cumsum(ev, axis=1)
+        frac = jnp.where(total > 0, cum / jnp.maximum(total, 1e-30), 1.0)
+        needed = 1 + jnp.sum(frac < variance_fraction, axis=1)
+        fracs.append(needed.astype(jnp.float32) / ev.shape[1])
+    return jnp.mean(jnp.stack(fracs), axis=0)
 
 
 def hosvd_trunc(
     x: jnp.ndarray,
     variance_fraction: float = DEFAULT_VARIANCE_FRACTION_3D,
+    use_kernel: bool = False,
 ) -> jnp.ndarray:
     """HOSVD-based truncation statistic for an N-D tensor (paper section 3.1.2).
 
     For each mode, unfold and compute the fraction of singular values whose
     squared mass reaches ``variance_fraction``; returns the mean fraction
-    across modes (scalar in (0, 1]).
-    """
+    across modes (scalar in (0, 1] -- a constant tensor yields the mean of
+    1/p over modes, not (1+p)/p).  The k=1 case of ``hosvd_trunc_batch``
+    (single implementation, bit-exact with the batch path)."""
     if x.ndim < 3:
         raise ValueError(f"hosvd_trunc expects >=3-D tensor, got {x.shape}")
-    x = x.astype(jnp.float32)
-    x = x - jnp.mean(x)
-    fracs = []
-    for mode in range(x.ndim):
-        u = _unfold(x, mode)
-        s2 = _gram_singular_values_sq(u)
-        total = jnp.maximum(jnp.sum(s2), 1e-30)
-        cum = jnp.cumsum(s2)
-        needed = 1 + jnp.sum(cum / total < variance_fraction)
-        fracs.append(needed.astype(jnp.float32) / s2.shape[0])
-    return jnp.mean(jnp.stack(fracs))
+    return hosvd_trunc_batch(x[None], variance_fraction,
+                             use_kernel=use_kernel)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +205,7 @@ def features_2d(x: jnp.ndarray, eps: float, cfg: PredictorConfig = PredictorConf
 
 def features_3d(x: jnp.ndarray, eps: float, cfg: PredictorConfig = PredictorConfig()) -> jnp.ndarray:
     sigma = jnp.std(x.astype(jnp.float32))
-    sv = hosvd_trunc(x, cfg.variance_fraction_3d)
+    sv = hosvd_trunc(x, cfg.variance_fraction_3d, use_kernel=cfg.use_kernels)
     qe = quantized_entropy(x, eps, cfg.qent_bins, use_kernel=cfg.use_kernels)
     log_qe = jnp.log(jnp.maximum(qe, 1e-3))
     log_ratio = jnp.log(jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
@@ -239,6 +256,22 @@ def svd_trunc_batch(
     return needed.astype(jnp.float32) / p
 
 
+def _sort_f32_fast(x: jnp.ndarray) -> jnp.ndarray:
+    """Ascending last-axis sort of f32 data via an order-preserving
+    uint32 key (~4x faster than XLA's CPU float comparator sort).
+
+    The key map is bijective -- negatives flip all bits, positives set
+    the sign bit -- and inverted after the sort, so the output carries
+    the EXACT input bit patterns and equals ``jnp.sort`` on non-NaN data
+    (including -0.0 < +0.0; ties need no stability, there is no payload).
+    """
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    key = jnp.where(u >> 31 == 1, ~u, u | jnp.uint32(0x80000000))
+    sk = jax.lax.sort(key, dimension=-1, is_stable=False)
+    v = jnp.where(sk >> 31 == 1, sk & jnp.uint32(0x7FFFFFFF), ~sk)
+    return jax.lax.bitcast_convert_type(v, jnp.float32)
+
+
 def quantized_entropy_sweep(
     slices: jnp.ndarray,
     epss: jnp.ndarray,
@@ -264,7 +297,7 @@ def quantized_entropy_sweep(
         from repro.kernels.qent import ops as qent_ops
         return qent_ops.quantized_entropy_sweep(flat, epss, num_bins=num_bins)
     n = flat.shape[1]
-    xs = jnp.sort(flat, axis=1)                       # once, shared by all ebs
+    xs = _sort_f32_fast(flat)                         # once, shared by all ebs
     iota = jnp.arange(n)
     ones = jnp.ones((k, 1), bool)
 
@@ -288,15 +321,30 @@ def quantized_entropy_sweep(
     return jax.lax.map(one_eps, epss).T               # (e, k) -> (k, e)
 
 
+def variance_fraction_for(cfg: PredictorConfig, stack_ndim: int) -> float:
+    """The truncation variance fraction a (k, ...) stack featurizes with:
+    2-D slices (rank-3 stacks) use ``variance_fraction_2d``, volumes
+    (rank >= 4) the HOSVD ``variance_fraction_3d``."""
+    return (cfg.variance_fraction_2d if stack_ndim == 3
+            else cfg.variance_fraction_3d)
+
+
 def _features_sweep_impl(slices, epss, *, vf, bins, use_kernels):
-    """Pure sweep body: (k, m, n) x (e,) -> (k, e, 2).
+    """Pure sweep body: (k, m, n) | (k, d, m, n) x (e,) -> (k, e, 2).
+
+    Rank-dispatching: rank-3 stacks run the batched 2-D SVD predictor,
+    rank-4+ stacks the batched HOSVD predictor (``hosvd_trunc_batch``);
+    the q-ent sweep flattens each element and is shared as-is.
 
     Kept jit-free so the distributed layer (``repro.dist.sweep``) can call
     it inside a ``shard_map`` body on each device's local slice shard.
     """
     x = slices.astype(jnp.float32)
-    sigma = jnp.std(x, axis=(1, 2))
-    sv = svd_trunc_batch(x, vf, use_kernel=use_kernels)
+    sigma = jnp.std(x, axis=tuple(range(1, x.ndim)))
+    if x.ndim == 3:
+        sv = svd_trunc_batch(x, vf, use_kernel=use_kernels)
+    else:
+        sv = hosvd_trunc_batch(x, vf, use_kernel=use_kernels)
     log_ratio = jnp.log(jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
     qe = quantized_entropy_sweep(x, epss, bins, use_kernel=use_kernels)
     log_qe = jnp.log(jnp.maximum(qe, 1e-3))                 # (k, e)
@@ -319,9 +367,14 @@ def features_sweep(
 ) -> jnp.ndarray:
     """The full predictor tensor in one pass: (k, m, n) x (e,) -> (k, e, 2).
 
+    Volumes are first-class: a rank-4 (k, d, m, n) stack routes the
+    eb-independent column through the batched HOSVD predictor
+    (``hosvd_trunc_batch``) instead of the 2-D SVD, same output shape.
+
     Column [..., 0] is log(q-ent) (eb-dependent, fused multi-eps
-    histogram); column [..., 1] is log(svd_trunc / sigma) (eb-independent,
-    computed once and broadcast).  Matches looped ``features_2d`` to f32
+    histogram); column [..., 1] is log(svd_trunc / sigma) (for volumes
+    log(hosvd_trunc / sigma); eb-independent, computed once and
+    broadcast).  Matches looped ``features_2d`` / ``features_3d`` to f32
     tolerance (regression-tested).
 
     Distribution: with ``sharded=None`` (default) the sweep automatically
@@ -332,10 +385,11 @@ def features_sweep(
     ``gather=False`` returns the padded per-device result still sharded
     over the mesh (see ``repro.dist.sweep.features_sweep_sharded``).
     """
-    if slices.ndim != 3:
+    if slices.ndim not in (3, 4):
         raise ValueError(
-            f"features_sweep expects a (k, m, n) slice stack, got "
-            f"{slices.shape}; wrap a single slice as x[None]")
+            f"features_sweep expects a (k, m, n) slice stack or a "
+            f"(k, d, m, n) volume stack, got {slices.shape}; wrap a single "
+            f"slice/volume as x[None]")
     _validate_eps_positive(epss)
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
     # Auto-routing skips k=1: a single slice has no parallelism to split,
@@ -353,8 +407,8 @@ def features_sweep(
             return dsweep.features_sweep_sharded(
                 slices, epss, cfg, mesh=use_mesh, gather=gather)
     return _features_sweep_traced(
-        slices, epss, vf=cfg.variance_fraction_2d, bins=cfg.qent_bins,
-        use_kernels=cfg.use_kernels)
+        slices, epss, vf=variance_fraction_for(cfg, slices.ndim),
+        bins=cfg.qent_bins, use_kernels=cfg.use_kernels)
 
 
 @functools.partial(jax.jit, static_argnames=("bins", "use_kernels"))
@@ -364,15 +418,19 @@ def _qent_sweep_traced(x, epss, *, bins, use_kernels):
 
 @functools.partial(jax.jit, static_argnames=("vf", "use_kernels"))
 def _svd_sigma_traced(x, *, vf, use_kernels):
-    sv = svd_trunc_batch(x[None], vf, use_kernel=use_kernels)[0]
+    if x.ndim == 2:
+        sv = svd_trunc_batch(x[None], vf, use_kernel=use_kernels)[0]
+    else:
+        sv = hosvd_trunc_batch(x[None], vf, use_kernel=use_kernels)[0]
     return sv, jnp.std(x.astype(jnp.float32))
 
 
 class SliceCache:
-    """Featurization cache for ONE slice (UC1/UC2 cost structure): the
-    eps-independent SVD/sigma part is computed at most once; q-ent is
-    memoized per error bound; ``prefetch`` fills the memo for a whole eb
-    grid with a single fused sweep (SVD once + e histograms, one read)."""
+    """Featurization cache for ONE slice or volume (UC1/UC2 cost
+    structure): the eps-independent SVD-or-HOSVD/sigma part is computed at
+    most once; q-ent is memoized per error bound; ``prefetch`` fills the
+    memo for a whole eb grid with a single fused sweep (truncation
+    predictor once + e histograms, one read)."""
 
     def __init__(self, x: jnp.ndarray, cfg: PredictorConfig):
         self._x = x
@@ -389,7 +447,8 @@ class SliceCache:
     def _ratio(self) -> jnp.ndarray:
         if self._log_ratio is None:
             sv, sigma = _svd_sigma_traced(
-                self._x, vf=self._cfg.variance_fraction_2d,
+                self._x,
+                vf=variance_fraction_for(self._cfg, self._x.ndim + 1),
                 use_kernels=self._cfg.use_kernels)
             self._log_ratio = jnp.log(
                 jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
@@ -441,6 +500,13 @@ class FeaturizationEngine:
     * ``sweep(slices, epss)``  -- (k, m, n) x (e,) -> (k, e, 2), one pass.
     * ``features(slices, eps)`` -- (k, 2): the e=1 column of the sweep.
     * ``cached(x)``            -- per-slice :class:`SliceCache`.
+
+    Volumes are first-class: every entry point also accepts a
+    (k, d, m, n) volume stack (``cached``: a single (d, m, n) volume) and
+    routes the eb-independent column through ``hosvd_trunc_batch`` --
+    per-mode unfoldings as batched Grams + batched ``eigvalsh`` -- with
+    ``variance_fraction_3d``; shapes, sharding, and caching behave
+    identically to the 2-D path.
 
     Distributed sweeps
     ------------------

@@ -61,14 +61,23 @@ class EbGridModel:
         model: str = "spline",
         cfg: P.PredictorConfig = P.PredictorConfig(),
         mesh=None,
+        ndim: int = 2,
     ) -> "EbGridModel":
+        """``ndim=2``: (k, m, n) slice stack; ``ndim=3``: (k, d, m, n)
+        volume stack (HOSVD featurization -- UC1/UC2 over the
+        ``compressors.STUDY_3D`` set run on the resulting model exactly
+        like the 2-D path)."""
+        if slices.ndim != ndim + 1:
+            raise ValueError(
+                f"EbGridModel.train(ndim={ndim}) expects a rank-{ndim + 1} "
+                f"stack, got {slices.shape}")
         comp = C.get(compressor)
-        # ONE fused sweep featurizes every (slice, grid-eb) pair: the SVD
-        # runs once per slice and each slice is read once for all ebs,
-        # instead of the old per-eb re-featurization.  Under a mesh the
-        # sweep shards the slice axis across devices; the per-eb fits are
-        # tiny, so features are all-gathered (np.asarray) while the
-        # training-time compressor runs execute on local shards only
+        # ONE fused sweep featurizes every (slice, grid-eb) pair: the
+        # SVD/HOSVD runs once per slice and each slice is read once for
+        # all ebs, instead of the old per-eb re-featurization.  Under a
+        # mesh the sweep shards the slice axis across devices; the per-eb
+        # fits are tiny, so features are all-gathered (np.asarray) while
+        # the training-time compressor runs execute on local shards only
         # (partitioned over processes, all-gathered as a (k, e) table).
         from repro.dist import sweep as DS
         feats = np.asarray(
@@ -79,8 +88,20 @@ class EbGridModel:
         for i, eps in enumerate(ebs):
             models.append(PL.CRPredictor.train_from_features(
                 jnp.asarray(feats[:, i, :]), jnp.asarray(cr_table[:, i]),
-                float(eps), model, cfg))
+                float(eps), model, cfg, ndim))
         return EbGridModel(np.asarray(ebs, np.float64), models, compressor, cfg)
+
+    @property
+    def ndim(self) -> int:
+        """Training data rank: 2 (slices) or 3 (volumes)."""
+        return self.models[0].ndim if self.models else 2
+
+    def _check_rank(self, data) -> None:
+        if np.ndim(data) != self.ndim:
+            raise ValueError(
+                f"EbGridModel '{self.name}' was trained on "
+                f"{self.ndim}-D data; got rank-{np.ndim(data)} input "
+                f"{np.shape(data)}")
 
     def log_ebs(self) -> np.ndarray:
         """log of the eb grid, computed once per model (every bisection
@@ -92,11 +113,13 @@ class EbGridModel:
 
     def predict(self, data: jnp.ndarray, eps: float,
                 feat_cache=None) -> float:
-        """Predicted CR for one slice at an arbitrary eb (log-interp).
+        """Predicted CR for one slice (or (d, m, n) volume) at an
+        arbitrary eb (log-interp).
 
         ``feat_cache``: a ``predictors.SliceCache`` (or any callable
         eps -> (2,)); reuses the eps-independent SVD/sigma across the
         whole sweep (the paper's UC1 cost structure)."""
+        self._check_rank(data)
         if feat_cache is None:
             # featurize under the SAME config the models were trained with
             feat_cache = P.get_engine(self.cfg).cached(data)
@@ -108,8 +131,13 @@ class EbGridModel:
             i0, i1, t = len(lg) - 1, len(lg) - 1, 0.0
         else:
             i1 = int(np.searchsorted(lg, le))
-            i0 = i1 - 1
-            t = (le - lg[i0]) / (lg[i1] - lg[i0])
+            if le == lg[i1]:
+                # exact interior grid point: one model evaluation
+                # suffices (t would come out 1.0 and cost two)
+                i0, t = i1, 0.0
+            else:
+                i0 = i1 - 1
+                t = (le - lg[i0]) / (lg[i1] - lg[i0])
         # q-ent is eb-dependent -> evaluate features at the grid ebs
         f0 = feat_cache(self.ebs[i0])[None]
         c0 = _clamp_cr(predict_fast(self.models[i0].model, f0)[0])
@@ -141,6 +169,7 @@ def find_error_bound_for_cr(
     q-ents from a single kernel launch.
     """
     # Bisection only ever evaluates features at the model-grid ebs.
+    grid_model._check_rank(data)
     if feat_cache is None:
         feat_cache = P.get_engine(grid_model.cfg).cached(data)
         feat_cache.prefetch(grid_model.ebs)
@@ -218,6 +247,17 @@ def best_compressor(
         raise ValueError(
             "best_compressor needs at least one trained model; got an "
             "empty models dict (train CRPredictors per compressor first)")
+    ndims = {m.ndim for m in models.values()}
+    if len(ndims) > 1:
+        raise ValueError(
+            f"best_compressor models mix training ndims {sorted(ndims)}; "
+            "features are shared across models, so all must be trained "
+            "on the same data rank")
+    model_ndim = ndims.pop()
+    if np.ndim(data) != model_ndim:
+        raise ValueError(
+            f"best_compressor models were trained on {model_ndim}-D data; "
+            f"got rank-{np.ndim(data)} input {np.shape(data)}")
     if feats is None:
         # featurize under the config the models were trained with
         cfg = next(iter(models.values())).cfg

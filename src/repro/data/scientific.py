@@ -147,9 +147,14 @@ def field_slices(name: str, count: int | None = None, seed: int = 0,
 
 def volume(name: str, shape=(64, 96, 96), seed: int = 0) -> jnp.ndarray:
     """A 3-D volume assembled from smoothly varying slices (for HOSVD/
-    TTHRESH experiments, paper section 4.5)."""
+    TTHRESH experiments, paper section 4.5).
+
+    Returns exactly ``shape``: slabs are generated at ``max(shape[1:])``
+    and cropped, so non-square requests like (4, 32, 64) no longer come
+    back silently truncated to (4, 32, 32).
+    """
     spec = FIELDS[name]
-    d, n = shape[0], shape[1]
+    d, n = shape[0], max(shape[1:])
     keys = jax.random.split(
         jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31) + 7 + seed), 1)
     zs = jnp.linspace(0.0, jnp.pi, d)

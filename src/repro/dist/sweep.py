@@ -3,13 +3,14 @@
 Production fields don't fit one device and sweep requests arrive
 concurrently, so the batched sweep engine
 (``repro.core.predictors.features_sweep``) gains a ``shard_map`` path over
-its slice axis here: the (k, m, n) stack is split across the mesh axis the
+its slice axis here: the (k, m, n) slice stack -- or (k, d, m, n) volume
+stack, sharded identically over k -- is split across the mesh axis the
 logical ``"slices"`` axis maps to (``"data"`` under the default rules of
 ``repro.dist.sharding``), each device runs the fused single-device sweep
-body on its local shard -- one batched Gram + eigvalsh and one multi-eps
-q-ent pass per shard, grid dim 0 of both batched kernels -- and the
-per-device ``(k_local, e, 2)`` results are reassembled into the global
-``(k, e, 2)`` tensor.
+body on its local shard -- one batched Gram + eigvalsh per 2-D stack (one
+per HOSVD mode for volumes) and one multi-eps q-ent pass per shard, grid
+dim 0 of both batched kernels -- and the per-device ``(k_local, e, 2)``
+results are reassembled into the global ``(k, e, 2)`` tensor.
 
 Slice counts that don't divide the mesh extent are padded with copies of
 the last slice; the pad rows are dropped from the gathered result
@@ -72,23 +73,26 @@ def slice_axes(mesh: Mesh) -> tuple:
 
 
 @functools.lru_cache(maxsize=32)
-def _sharded_sweep_fn(mesh: Mesh, axes: tuple, vf: float, bins: int,
-                      use_kernels: bool):
-    """jit'd shard_map sweep for one (mesh, config); cached so repeated
-    sweeps (serving, training grids) reuse the compiled executable."""
+def _sharded_sweep_fn(mesh: Mesh, axes: tuple, rank: int, vf: float,
+                      bins: int, use_kernels: bool):
+    """jit'd shard_map sweep for one (mesh, stack rank, config); cached so
+    repeated sweeps (serving, training grids) reuse the compiled
+    executable.  ``rank`` is the stack's ndim: 3 for (k, m, n) slice
+    stacks, 4 for (k, d, m, n) volume stacks -- only dim 0 is sharded
+    either way."""
     from repro.core import predictors as PRED
 
     part = axes[0] if len(axes) == 1 else axes
 
     def body(local_slices, epss):
-        # each device featurizes its (k_local, m, n) shard with the exact
+        # each device featurizes its (k_local, ...) shard with the exact
         # single-device sweep body: sharded == single-device to f32 tol
         return PRED._features_sweep_impl(
             local_slices, epss, vf=vf, bins=bins, use_kernels=use_kernels)
 
     f = S.shard_map(
         body, mesh=mesh,
-        in_specs=(P(part, None, None), P(None)),
+        in_specs=(P(part, *([None] * (rank - 1))), P(None)),
         out_specs=P(part, None, None),
         axis_names=frozenset(axes))
     return jax.jit(f)
@@ -104,9 +108,11 @@ def features_sweep_sharded(
 ) -> jnp.ndarray:
     """``features_sweep`` sharded over the slice axis of ``mesh``.
 
-    (k, m, n) x (e,) -> (k, e, 2) [``gather=True``] or the padded
-    (k_pad, e, 2) result still sharded over the mesh with pad rows zeroed
-    [``gather=False``]; ``k_pad = ceil(k / extent) * extent``.
+    (k, m, n) or (k, d, m, n) x (e,) -> (k, e, 2) [``gather=True``] or the
+    padded (k_pad, e, 2) result still sharded over the mesh with pad rows
+    zeroed [``gather=False``]; ``k_pad = ceil(k / extent) * extent``.
+    Volume stacks shard the k axis exactly like slice stacks do (each
+    device runs the batched HOSVD + q-ent body on its local shard).
 
     Falls back to the single-device engine when no mesh (or an extent-1
     mesh) is available, so callers can route unconditionally.
@@ -116,9 +122,10 @@ def features_sweep_sharded(
     mesh = active_sweep_mesh(mesh)
     if mesh is None:
         return PRED.features_sweep(slices, epss, cfg, sharded=False)
-    if slices.ndim != 3:
+    if slices.ndim not in (3, 4):
         raise ValueError(
-            f"features_sweep_sharded expects (k, m, n), got {slices.shape}")
+            f"features_sweep_sharded expects (k, m, n) or (k, d, m, n), "
+            f"got {slices.shape}")
     PRED._validate_eps_positive(epss)
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
 
@@ -134,7 +141,8 @@ def features_sweep_sharded(
             axis=0)
 
     out = _sharded_sweep_fn(
-        mesh, axes, cfg.variance_fraction_2d, cfg.qent_bins,
+        mesh, axes, slices.ndim,
+        PRED.variance_fraction_for(cfg, slices.ndim), cfg.qent_bins,
         cfg.use_kernels)(slices, epss)
 
     if gather:
@@ -161,8 +169,9 @@ def sweep_padded(
 ) -> jnp.ndarray:
     """One coalesced sweep launch over a padded request batch.
 
-    The sweep service stacks several requests' slices into one (k, m, n)
-    batch, pads it to a *bucketed* ``k_pad`` (so a small set of compiled
+    The sweep service stacks several requests' slices (or volumes: any
+    shared trailing shape) into one (k, m, n) / (k, d, m, n) batch, pads
+    it to a *bucketed* ``k_pad`` (so a small set of compiled
     executables serves every batch size), and launches once:
 
     * ``k_pad`` a multiple of the mesh's slice extent -> the ``shard_map``
@@ -180,8 +189,10 @@ def sweep_padded(
     """
     from repro.core import predictors as PRED
     cfg = cfg if cfg is not None else PRED.PredictorConfig()
-    if slices.ndim != 3:
-        raise ValueError(f"sweep_padded expects (k, m, n), got {slices.shape}")
+    if slices.ndim not in (3, 4):
+        raise ValueError(
+            f"sweep_padded expects (k, m, n) or (k, d, m, n), "
+            f"got {slices.shape}")
     PRED._validate_eps_positive(epss)
     k = slices.shape[0]
     k_pad = k if k_pad is None else int(k_pad)
@@ -200,8 +211,8 @@ def sweep_padded(
             return features_sweep_sharded(
                 slices, epss, cfg, mesh=mesh, gather=False)
     return PRED._features_sweep_traced(
-        slices, epss, vf=cfg.variance_fraction_2d, bins=cfg.qent_bins,
-        use_kernels=cfg.use_kernels)
+        slices, epss, vf=PRED.variance_fraction_for(cfg, slices.ndim),
+        bins=cfg.qent_bins, use_kernels=cfg.use_kernels)
 
 
 def scatter_requests(out, sizes: Sequence[int]) -> list:

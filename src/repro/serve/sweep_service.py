@@ -10,10 +10,11 @@ across queries, so the service batches the amortization in three layers:
    single worker thread flushes when the pending row count reaches
    ``max_batch_slices`` or the oldest request has waited ``max_wait_ms``.
    Every flushed batch becomes ONE ``dist.sweep.sweep_padded`` launch per
-   (slice shape, engine config) group -- ``gather=False`` on the
-   persistent mesh, so devices keep their shards until the single
-   scatter-back transfer -- and the (k, e, 2) rows are scattered to the
-   per-request futures.
+   (slice shape, engine config) group -- shapes are arbitrary trailing
+   shapes, so (d, m, n) volume requests coalesce alongside (m, n) slice
+   requests -- ``gather=False`` on the persistent mesh, so devices keep
+   their shards until the single scatter-back transfer -- and the
+   (k, e, 2) rows are scattered to the per-request futures.
 
 2. **Cross-request feature cache** -- content hash of the f32 slice bytes
    + engine config -> per-error-bound feature rows, LRU with a byte
@@ -166,7 +167,7 @@ class FeatureCache:
 class _Item:
     """One slice's launch needs within a request."""
     key: tuple                       # (digest, engine config)
-    x: np.ndarray                    # (m, n) f32 copy used for the launch
+    x: np.ndarray                    # (m, n) / (d, m, n) f32 launch copy
     eps_keys: Tuple[float, ...]      # f32 ebs this request reads
 
 
@@ -216,13 +217,17 @@ class SweepService:
 
     def submit_featurize(self, slices, epss,
                          cfg: Optional[P.PredictorConfig] = None) -> Future:
-        """(k, m, n) stack x (e,) ebs -> Future[(k, e, 2) np.ndarray],
-        bit-equal to ``features_sweep(slices, epss)``."""
+        """(k, m, n) slice stack or (k, d, m, n) volume stack x (e,) ebs
+        -> Future[(k, e, 2) np.ndarray], bit-equal to
+        ``features_sweep(slices, epss)``.  Batching/digests are keyed by
+        the trailing shape, so volume requests coalesce with each other
+        exactly like slice requests do."""
         cfg = cfg if cfg is not None else self.scfg.pcfg
         arr = np.asarray(slices, np.float32)
-        if arr.ndim != 3:
+        if arr.ndim not in (3, 4):
             raise ValueError(
-                f"submit_featurize expects (k, m, n), got {arr.shape}")
+                f"submit_featurize expects (k, m, n) or (k, d, m, n), "
+                f"got {arr.shape}")
         eps_keys = tuple(_f32(e) for e in np.asarray(epss).reshape(-1))
         if not eps_keys:
             raise ValueError("submit_featurize needs at least one eb")
@@ -238,11 +243,12 @@ class SweepService:
         comes from the shared launch / cross-request cache."""
         cfg = grid_model.cfg
         x = np.asarray(data, np.float32)
-        if x.ndim != 2:
+        if x.ndim != grid_model.ndim:
             # validate at submit time: a worker-side failure would poison
             # the whole coalesced batch, not just this request
-            raise ValueError(f"submit_find_eb expects a 2-D slice, "
-                             f"got {x.shape}")
+            raise ValueError(
+                f"submit_find_eb: grid model '{grid_model.name}' was "
+                f"trained on {grid_model.ndim}-D data, got {x.shape}")
         eps_keys = tuple(_f32(e) for e in np.asarray(grid_model.ebs))
         item = _Item((slice_digest(x), cfg), x, eps_keys)
         return self._submit(_Request(
@@ -257,10 +263,13 @@ class SweepService:
         if not models:
             raise ValueError("submit_best_compressor needs trained models")
         cfg = next(iter(models.values())).cfg
+        ndims = {m.ndim for m in models.values()}
         x = np.asarray(data, np.float32)
-        if x.ndim != 2:
-            raise ValueError(f"submit_best_compressor expects a 2-D slice, "
-                             f"got {x.shape}")
+        if len(ndims) > 1 or x.ndim != next(iter(ndims)):
+            raise ValueError(
+                f"submit_best_compressor: models trained on "
+                f"{sorted(ndims)}-D data must all match the request rank, "
+                f"got {x.shape}")
         item = _Item((slice_digest(x), cfg), x, (_f32(eps),))
         return self._submit(_Request(
             "best_compressor", [item], Future(),
@@ -291,16 +300,17 @@ class SweepService:
     def launches(self) -> int:
         return self._launches
 
-    def warmup(self, shapes: Sequence[Tuple[int, int]],
+    def warmup(self, shapes: Sequence[Tuple[int, ...]],
                grid_sizes: Sequence[int] = (1,),
                row_buckets: Sequence[int] = (1,),
                cfg: Optional[P.PredictorConfig] = None) -> None:
         """Pre-compile the bucketed executables for the expected traffic
-        (slice shapes x eps-grid sizes x row buckets) so first requests
-        don't pay compile latency."""
+        (slice (m, n) / volume (d, m, n) shapes x eps-grid sizes x row
+        buckets) so first requests don't pay compile latency."""
         cfg = cfg if cfg is not None else self.scfg.pcfg
-        for m, n in shapes:
-            x = np.zeros((1, m, n), np.float32)
+        for shape in shapes:
+            shape = tuple(shape)
+            x = np.zeros((1,) + shape, np.float32)
             for e in grid_sizes:
                 for k in row_buckets:
                     k_pad, e_pad = _row_bucket(k), _eps_bucket(e)
@@ -308,7 +318,7 @@ class SweepService:
                         jnp.asarray(x), np.full((e_pad,), 1.0, np.float32),
                         cfg, k_pad=k_pad, mesh=self.mesh)
                     np.asarray(out)
-                    self._executables.add(self._sig(k_pad, (m, n), e_pad, cfg))
+                    self._executables.add(self._sig(k_pad, shape, e_pad, cfg))
 
     def close(self) -> None:
         """Flush pending requests and stop the worker thread."""
@@ -380,7 +390,7 @@ class SweepService:
     # worker: coalesced launch + scatter-back + request completion
     # ------------------------------------------------------------------
 
-    def _sig(self, k_pad: int, shape: Tuple[int, int], e_pad: int,
+    def _sig(self, k_pad: int, shape: Tuple[int, ...], e_pad: int,
              cfg: P.PredictorConfig) -> tuple:
         mesh_key = (None if self.mesh is None
                     else (self.mesh.axis_names, self.mesh.devices.shape))

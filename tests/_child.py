@@ -1,0 +1,23 @@
+"""Shared child-interpreter helper for multi-device tests.
+
+The main pytest process must keep the default single CPU device (jax
+locks the device count at first init), so every sharded scenario runs in
+a child interpreter with XLA_FLAGS set before importing jax.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_child(body: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    code = textwrap.dedent(body)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout

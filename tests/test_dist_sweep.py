@@ -4,27 +4,11 @@ Like test_dist.py, every multi-device scenario runs in a child interpreter
 with XLA_FLAGS set before jax is imported (the main pytest process keeps
 whatever device count it started with).
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-SRC = os.path.join(os.path.dirname(__file__), "..", "src")
-
-
-def run_child(body: str, devices: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    code = textwrap.dedent(body)
-    proc = subprocess.run([sys.executable, "-c", code], env=env,
-                          capture_output=True, text=True, timeout=560)
-    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
-    return proc.stdout
+from _child import run_child
 
 
 def test_sharded_sweep_matches_single_device():

@@ -1,0 +1,253 @@
+"""Batched + sharded 3-D/HOSVD featurization sweeps.
+
+Covers the two reproduced bugs (``hosvd_trunc(const) > 1`` and
+``volume()`` silently truncating non-square shapes), the single-
+implementation scalar/batch equivalence, the rank-dispatching sweep
+engine vs the looped ``features_3d`` baseline (incl. the Pallas-kernel
+route), sharded-vs-single-device volume sweeps (child interpreter, 8
+virtual devices), and volume requests through the coalescing
+``SweepService``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _child import run_child
+from repro.core import pipeline as PL, predictors as P, usecases as UC
+from repro.data import scientific
+
+
+@pytest.fixture(scope="module")
+def vols():
+    return jnp.stack([scientific.volume("qmcpack", shape=(8, 32, 48), seed=s)
+                      for s in range(5)])
+
+
+@pytest.fixture(scope="module")
+def eb_grid(vols):
+    rng = float(jnp.max(vols) - jnp.min(vols))
+    # injective-binning regime: every histogram/sort path is exact here
+    return [r * rng for r in (1e-3, 1e-2, 1e-1)]
+
+
+# ------------------------------------------------------- bug regressions
+def test_hosvd_trunc_constant_volume_in_range():
+    """A zero-variance mode must yield fraction 1/p, not (1+p)/p: the
+    constant volume used to return ~1.17 (> the documented (0, 1])."""
+    got = float(P.hosvd_trunc(jnp.ones((8, 16, 16))))
+    assert got <= 1.0, got
+    # mean over modes of 1/p: (1/8 + 1/16 + 1/16) / 3
+    assert abs(got - (1 / 8 + 1 / 16 + 1 / 16) / 3) < 1e-6, got
+    batch = np.asarray(P.hosvd_trunc_batch(jnp.ones((2, 8, 16, 16))))
+    assert (batch <= 1.0).all(), batch
+
+
+@pytest.mark.parametrize("shape", [(4, 32, 64), (4, 64, 32), (6, 32, 32),
+                                   (3, 16, 48)])
+def test_volume_returns_requested_shape(shape):
+    """volume((4, 32, 64)) used to come back silently as (4, 32, 32)."""
+    v = scientific.volume("qmcpack", shape=shape)
+    assert v.shape == shape, (v.shape, shape)
+
+
+def test_volume_square_values_unchanged_by_fix():
+    """Square requests take the exact pre-fix generation path (slabs at
+    n = shape[1]), so existing fixtures keep their values."""
+    a = scientific.volume("miranda-vx", shape=(4, 32, 32))
+    b = scientific.volume("miranda-vx", shape=(4, 32, 48))[:, :, :32]
+    assert a.shape == (4, 32, 32)
+    assert not bool(jnp.all(a == b))  # wider request really generates wider
+
+
+# ------------------------------------------------ scalar == batch (hosvd)
+def test_hosvd_scalar_is_batch_k1_bitexact(vols):
+    """Single implementation: hosvd_trunc(x) == hosvd_trunc_batch(x[None])[0]
+    bit-exact, and the batch over k volumes matches the per-volume loop."""
+    batch = np.asarray(P.hosvd_trunc_batch(vols))
+    for i, v in enumerate(vols):
+        scalar = np.asarray(P.hosvd_trunc(v))
+        np.testing.assert_array_equal(
+            scalar, np.asarray(P.hosvd_trunc_batch(v[None])[0]))
+        np.testing.assert_allclose(batch[i], scalar, atol=1e-6)
+
+
+def test_hosvd_batch_kernel_route(vols):
+    jnp_route = np.asarray(P.hosvd_trunc_batch(vols))
+    kernel = np.asarray(P.hosvd_trunc_batch(vols, use_kernel=True))
+    np.testing.assert_allclose(kernel, jnp_route, atol=1e-5)
+
+
+# ------------------------------------------------- rank-dispatching sweep
+def test_features_sweep_3d_matches_looped(vols, eb_grid):
+    """(k, e, 2) volume sweep == looped features_3d per (volume, eb)."""
+    sweep = np.asarray(P.features_sweep(vols, jnp.asarray(eb_grid)))
+    assert sweep.shape == (vols.shape[0], len(eb_grid), 2)
+    for s in range(vols.shape[0]):
+        for i, eps in enumerate(eb_grid):
+            want = np.asarray(P.features_3d(vols[s], eps))
+            np.testing.assert_allclose(sweep[s, i], want, rtol=1e-5,
+                                       atol=1e-4)
+
+
+def test_features_sweep_3d_kernel_route(vols, eb_grid):
+    cfg_j = P.PredictorConfig(use_kernels=False, qent_bins=65536)
+    cfg_k = P.PredictorConfig(use_kernels=True, qent_bins=65536)
+    f_j = P.features_sweep(vols, jnp.asarray(eb_grid), cfg_j)
+    f_k = P.features_sweep(vols, jnp.asarray(eb_grid), cfg_k)
+    np.testing.assert_allclose(np.asarray(f_j), np.asarray(f_k),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_features_sweep_3d_finite_on_constant_volumes():
+    f = P.features_sweep(jnp.ones((2, 4, 16, 16)), [1e-3, 1e-2])
+    assert bool(jnp.all(jnp.isfinite(f)))
+
+
+def test_slice_cache_on_volume(vols, eb_grid):
+    """SliceCache over a (d, m, n) volume: prefetch == sweep row, and the
+    HOSVD variance fraction is used (not the 2-D one)."""
+    cache = P.get_engine().cached(vols[0])
+    pre = np.asarray(cache.prefetch(jnp.asarray(eb_grid)))
+    want = np.asarray(P.features_sweep(vols[:1], jnp.asarray(eb_grid))[0])
+    np.testing.assert_array_equal(pre, want)
+    one = np.asarray(cache(eb_grid[1]))
+    np.testing.assert_allclose(one, want[1], atol=1e-6)
+
+
+# ----------------------------------------------------- pipeline/usecases
+def test_cr_predictor_3d_roundtrip(vols, eb_grid):
+    """CRPredictor.train/predict ndim=3 route through the engine (no
+    Python loop) and match training on precomputed looped features."""
+    eps = eb_grid[1]
+    crs = jnp.asarray([2.0 + 0.5 * i for i in range(vols.shape[0])])
+    pred = PL.CRPredictor.train(vols, crs, eps, ndim=3)
+    out = np.asarray(pred.predict(vols))
+    feats = jnp.stack([P.features_3d(v, eps) for v in vols])
+    want = np.asarray(PL.CRPredictor.train_from_features(
+        feats, crs, eps, ndim=3).predict_from_features(feats))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        PL.CRPredictor.train(vols, crs, eps, ndim=2)
+    with pytest.raises(ValueError):
+        pred.predict(vols[0])
+
+
+def test_ebgrid_train_3d_uc1_uc2(vols, eb_grid):
+    """EbGridModel.train(ndim=3) + UC1/UC2 over the 3-D study set."""
+    from repro import compressors as C
+    gm = UC.EbGridModel.train(vols, "zfp", eb_grid, ndim=3)
+    test = scientific.volume("qmcpack", shape=(8, 32, 48), seed=11)
+    cr = gm.predict(test, float(np.sqrt(eb_grid[0] * eb_grid[1])))
+    assert np.isfinite(cr) and cr > 0
+    eps, pred_cr = UC.find_error_bound_for_cr(gm, test, target_cr=cr)
+    assert eb_grid[0] <= eps <= eb_grid[-1]
+    models = {n: PL.CRPredictor.train(
+        vols, jnp.asarray([C.get(n).cr(v, eb_grid[1]) for v in vols]),
+        eb_grid[1], ndim=3) for n in ("zfp", "bitgrooming")}
+    best, preds = UC.best_compressor(models, test, eb_grid[1])
+    assert best in models and all(np.isfinite(v) for v in preds.values())
+    with pytest.raises(ValueError):
+        UC.EbGridModel.train(vols, "zfp", eb_grid, ndim=2)
+    # data rank must match the models' training ndim (here: 3-D)
+    assert gm.ndim == 3
+    with pytest.raises(ValueError):
+        gm.predict(test[0], eb_grid[1])                  # 2-D to 3-D model
+    with pytest.raises(ValueError):
+        UC.find_error_bound_for_cr(gm, test[0], target_cr=2.0)
+    with pytest.raises(ValueError):
+        UC.best_compressor(models, test[0], eb_grid[1])
+
+
+# ------------------------------------------------------- sharded volumes
+def test_sharded_volume_sweep_matches_single_device():
+    """(k, e, 2) volume sweep from an 8-device mesh == single-device
+    engine, for a divisible k and a non-divisible k (pad + drop)."""
+    out = run_child("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.dist import sharding as S
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        vols = jnp.stack([scientific.volume("qmcpack", shape=(8, 32, 48),
+                                            seed=s) for s in range(16)])
+        rng = float(jnp.max(vols) - jnp.min(vols))
+        ebs = jnp.asarray([r * rng for r in (1e-3, 1e-2, 1e-1)], jnp.float32)
+        mesh = M.make_sweep_mesh()
+        for k in (16, 11):           # 11 does not divide 8: pad to 16
+            ref = np.asarray(P.features_sweep(vols[:k], ebs, sharded=False))
+            with S.use_mesh(mesh):
+                got = np.asarray(P.features_sweep(vols[:k], ebs))
+            assert got.shape == (k, 3, 2), got.shape
+            d = float(np.abs(got - ref).max())
+            assert d < 1e-5, (k, d)
+            print("K", k, "MAXDIFF", d)
+        # gather=False keeps the padded result sharded with masked pad
+        with S.use_mesh(mesh):
+            padded = P.features_sweep(vols[:11], ebs, gather=False)
+        assert padded.shape == (16, 3, 2), padded.shape
+        assert bool(jnp.all(padded[11:] == 0)), "pad rows not masked"
+        assert len(padded.sharding.device_set) == 8, padded.sharding
+        np.testing.assert_allclose(
+            np.asarray(padded[:11]),
+            np.asarray(P.features_sweep(vols[:11], ebs, sharded=False)),
+            atol=1e-5)
+        print("SHARDED VOLUME OK")
+    """)
+    assert "K 16" in out and "K 11" in out and "SHARDED VOLUME OK" in out
+
+
+# --------------------------------------------------------- sweep service
+def test_sweep_service_volume_requests_bit_equal(vols, eb_grid):
+    """Volume featurize/UC1/UC2 requests through the coalescing service
+    == serial dispatch, and hot volumes are served from the cache."""
+    from repro.serve.sweep_service import SweepService, ServiceConfig
+
+    gm = UC.EbGridModel.train(vols[:4], "zfp", eb_grid, ndim=3)
+    test = scientific.volume("qmcpack", shape=(8, 32, 48), seed=9)
+    ref_feats = np.asarray(P.features_sweep(vols, jnp.asarray(eb_grid)))
+    ref_eb = UC.find_error_bound_for_cr(gm, test, target_cr=2.0)
+    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+        # mixed ranks coalesce: one volume stack + one 2-D slice request
+        f_vol = svc.submit_featurize(vols, eb_grid)
+        f_2d = svc.submit_featurize(np.asarray(vols[:2, 0]), eb_grid)
+        f_eb = svc.submit_find_eb(gm, test, target_cr=2.0)
+        np.testing.assert_array_equal(f_vol.result(), ref_feats)
+        np.testing.assert_array_equal(
+            f_2d.result(),
+            np.asarray(P.features_sweep(vols[:2, 0], jnp.asarray(eb_grid))))
+        assert f_eb.result() == ref_eb
+        launches = svc.launches
+        # hot volume: repeat UC1 + UC2 are served from the cache
+        assert svc.find_eb(gm, test, 2.0) == ref_eb
+        models = {"zfp": gm.models[1]}
+        best, preds = svc.best_compressor(models, test, eb_grid[1])
+        want = UC.best_compressor(models, test, eb_grid[1])
+        assert (best, preds) == want
+        assert svc.launches == launches, "hot volume re-launched"
+        with pytest.raises(ValueError):
+            svc.submit_featurize(np.zeros((4, 4)), eb_grid)  # rank-2 stack
+
+
+# --------------------------------------------------- exact-grid-eb probe
+def test_ebgrid_exact_grid_probe_single_eval(monkeypatch):
+    """A query eps exactly on an interior grid eb must cost ONE
+    predict_fast call (searchsorted used to yield t == 1.0 and two)."""
+    slices = scientific.field_slices("qmcpack", count=6, n=48)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    ebs = [r * rng for r in (1e-3, 1e-2, 1e-1, 3e-1)]
+    gm = UC.EbGridModel.train(slices, "zfp", ebs)
+    calls = []
+    real = UC.predict_fast
+    monkeypatch.setattr(UC, "predict_fast",
+                        lambda m, f: calls.append(1) or real(m, f))
+    cache = P.get_engine(gm.cfg).cached(slices[0])
+    for i in (1, 2):                      # interior grid points
+        calls.clear()
+        cr = gm.predict(slices[0], float(gm.ebs[i]), cache)
+        assert len(calls) == 1, (i, len(calls))
+        assert np.isfinite(cr) and cr > 0
+    calls.clear()                         # off-grid interior: still two
+    gm.predict(slices[0], float(np.sqrt(gm.ebs[1] * gm.ebs[2])), cache)
+    assert len(calls) == 2, len(calls)

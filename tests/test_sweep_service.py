@@ -241,6 +241,8 @@ def test_submit_validation(setup):
     sweep_padded route."""
     slices, ebs, gm, eps, models = setup
     with SweepService(ServiceConfig(max_wait_ms=1.0)) as svc:
+        # volumes are first-class, but the data rank must match the
+        # models' training ndim (gm/models here are 2-D-trained)
         with pytest.raises(ValueError):
             svc.submit_find_eb(gm, slices[10:12], 6.0)      # 3-D data
         with pytest.raises(ValueError):
