@@ -1,0 +1,166 @@
+"""Multi-process sweep fabric gate: 1-process-8-device vs
+2-process-4-device equivalence (ISSUE 5 acceptance).
+
+A single-process child with 8 virtual CPU devices runs the sharded sweep
+over 2-D slice stacks and rank-4 volume stacks (divisible and ragged k);
+two ``jax.distributed`` children with 4 virtual devices each (joined on
+a free localhost port, gloo collectives) run the SAME sweeps through the
+multi-process path -- identical-global-stack ingestion AND process-local
+ingestion -- and process 0 saves its gathered tensors.  The parent
+asserts every multi-process tensor is BIT-EXACT against the
+single-process one (the per-device shard body is identical, only the
+fabric changed) and records the timings side by side.
+
+Virtual CPU devices share the same cores, so multi-process wall-clock
+speedup is not the acceptance signal here (that comes on real multi-node
+hardware); the gate is exactness across the process boundary plus a
+record of the fabric overhead.  Writes ``results/BENCH_multihost.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+K2D, K2D_RAGGED, N = 16, 11, 96
+KV, KV_RAGGED = 8, 3
+VOL_SHAPE = (8, 32, 32)
+EB_RELS = (1e-4, 1e-3, 1e-2)
+DEVICES_TOTAL = 8
+NPROCS = 2
+
+CASES = ("2d_full", "2d_ragged", "vol_full", "vol_ragged")
+
+
+def _stacks():
+    import jax.numpy as jnp
+    from repro.data import scientific
+
+    slices = scientific.field_slices("miranda-vx", count=K2D, n=N)
+    vols = scientific.volume("miranda-vx", shape=(KV,) + VOL_SHAPE)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    epss = np.asarray([r * rng for r in EB_RELS], np.float32)
+    return {
+        "2d_full": slices,
+        "2d_ragged": slices[:K2D_RAGGED],
+        "vol_full": vols,
+        "vol_ragged": vols[:KV_RAGGED],
+    }, epss
+
+
+def _child_single(out_prefix: str) -> None:
+    import jax
+    from repro.dist import sweep as DS
+    from repro.launch import mesh as M
+
+    assert len(jax.devices()) == DEVICES_TOTAL, jax.devices()
+    mesh = M.make_sweep_mesh()
+    stacks, epss = _stacks()
+    times = {}
+    for name, stack in stacks.items():
+        t0 = time.perf_counter()
+        out = np.asarray(DS.features_sweep_sharded(stack, epss, mesh=mesh))
+        times[name] = time.perf_counter() - t0
+        np.save(f"{out_prefix}.{name}.npy", out)
+    with open(out_prefix + ".json", "w") as f:
+        json.dump({"devices": DEVICES_TOTAL, "processes": 1,
+                   "times_s": times}, f)
+
+
+def _child_multi(pid: int, port: int, out_prefix: str) -> None:
+    from repro.launch import mesh as M
+    M.dist_init(f"127.0.0.1:{port}", num_processes=NPROCS, process_id=pid)
+
+    import jax
+    from repro.dist import sweep as DS
+
+    assert len(jax.devices()) == DEVICES_TOTAL
+    assert jax.local_device_count() == DEVICES_TOTAL // NPROCS
+    mesh = M.make_sweep_mesh()
+    stacks, epss = _stacks()
+    times, times_local = {}, {}
+    outs = {}
+    for name, stack in stacks.items():
+        t0 = time.perf_counter()
+        outs[name] = np.asarray(
+            DS.features_sweep_sharded(stack, epss, mesh=mesh))
+        times[name] = time.perf_counter() - t0
+        # process-local ingestion: each process feeds only its block
+        host = np.asarray(stack)
+        lo, hi = DS.process_block(len(host), mesh)
+        t0 = time.perf_counter()
+        local = np.asarray(DS.features_sweep_sharded(
+            host[lo:hi], epss, mesh=mesh, process_local=True,
+            global_k=len(host)))
+        times_local[name] = time.perf_counter() - t0
+        assert np.array_equal(local, outs[name]), \
+            f"{name}: process-local ingestion diverged"
+    if pid == 0:
+        for name, out in outs.items():
+            np.save(f"{out_prefix}.{name}.npy", out)
+        with open(out_prefix + ".json", "w") as f:
+            json.dump({"devices": DEVICES_TOTAL, "processes": NPROCS,
+                       "times_s": times, "times_local_s": times_local}, f)
+
+
+def main() -> dict:
+    from benchmarks import common
+
+    with tempfile.TemporaryDirectory() as tmp:
+        single = os.path.join(tmp, "p1")
+        multi = os.path.join(tmp, "p2")
+        common.run_child_module(
+            "benchmarks.bench_multihost", ["--child-single", single],
+            DEVICES_TOTAL)
+        port = common.free_port()
+        common.wait_children([
+            common.spawn_child_module(
+                "benchmarks.bench_multihost",
+                ["--child-multi", pid, port, multi],
+                DEVICES_TOTAL // NPROCS)
+            for pid in range(NPROCS)])
+
+        with open(single + ".json") as f:
+            meta1 = json.load(f)
+        with open(multi + ".json") as f:
+            meta2 = json.load(f)
+        out = {"devices": DEVICES_TOTAL, "processes": NPROCS,
+               "eb_count": len(EB_RELS), "cases": {}}
+        for name in CASES:
+            a = np.load(f"{single}.{name}.npy")
+            b = np.load(f"{multi}.{name}.npy")
+            diff = float(np.abs(a - b).max())
+            bitexact = bool(np.array_equal(a, b))
+            out["cases"][name] = {
+                "k": int(a.shape[0]),
+                "single_process_s": meta1["times_s"][name],
+                "two_process_s": meta2["times_s"][name],
+                "two_process_local_ingest_s": meta2["times_local_s"][name],
+                "max_abs_diff": diff,
+                "bitexact": bitexact,
+            }
+            common.emit(
+                f"multihost/{name}", meta2["times_s"][name] * 1e6,
+                f"k={a.shape[0]} 1proc_s={meta1['times_s'][name]:.2f} "
+                f"2proc_s={meta2['times_s'][name]:.2f} "
+                f"bitexact={bitexact}")
+            # acceptance: crossing the process boundary changes NOTHING
+            assert bitexact, \
+                f"{name}: 2-process sweep diverged (maxdiff {diff})"
+    common.save_json("BENCH_multihost", out)
+    return out
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child-single":
+        _child_single(sys.argv[2])
+    elif len(sys.argv) > 1 and sys.argv[1] == "--child-multi":
+        _child_multi(int(sys.argv[2]), int(sys.argv[3]), sys.argv[4])
+    else:
+        res = main()
+        print("PASS: 2-process sweep fabric bit-exact vs single process;",
+              json.dumps(res["cases"], indent=1))

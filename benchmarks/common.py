@@ -68,13 +68,20 @@ def crs_for(comp: str, field: str, count: int, n: int, eps: float):
                        for i in range(count)])
 
 
-def run_child_module(module: str, args, num_devices: int,
-                     timeout: int = 560):
-    """Run ``python -m module *args`` in a child interpreter with
-    ``num_devices`` virtual CPU devices (jax locks the device count at
-    first init, so multi-device benchmark configurations cannot run in
-    the parent).  Asserts a zero exit and returns the CompletedProcess.
-    """
+def free_port() -> int:
+    """A free localhost TCP port (jax.distributed coordinator)."""
+    import socket
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def spawn_child_module(module: str, args, num_devices: int):
+    """Start ``python -m module *args`` detached, with ``num_devices``
+    virtual CPU devices (jax locks the device count at first init, so
+    multi-device configurations cannot run in the parent).  Combine with
+    :func:`wait_children`; multi-process fabrics spawn one child per
+    process against a :func:`free_port` coordinator."""
     import subprocess
     import sys
     env = dict(os.environ)
@@ -83,11 +90,38 @@ def run_child_module(module: str, args, num_devices: int,
         [os.path.join(os.path.dirname(__file__), "..", "src"),
          os.path.dirname(os.path.dirname(__file__)),
          env.get("PYTHONPATH", "")])
-    proc = subprocess.run([sys.executable, "-m", module, *map(str, args)],
-                          env=env, capture_output=True, text=True,
-                          timeout=timeout)
-    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
-    return proc
+    return subprocess.Popen(
+        [sys.executable, "-m", module, *map(str, args)], env=env,
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def wait_children(procs, timeout: int = 560) -> list:
+    """Wait for :func:`spawn_child_module` children; on timeout every
+    child is reaped (a hung collective must not leak processes).
+    Asserts zero exits and returns the per-child (stdout, stderr)."""
+    import subprocess
+    try:
+        outs = [p.communicate(timeout=timeout) for p in procs]
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        outs = [p.communicate() for p in procs]
+        raise AssertionError("children timed out (hung collective?):\n" +
+                             "\n".join(o + "\n" + e for o, e in outs))
+    assert all(p.returncode == 0 for p in procs), "\n".join(
+        f"rc={p.returncode}\n{o}\n{e}"
+        for p, (o, e) in zip(procs, outs))
+    return outs
+
+
+def run_child_module(module: str, args, num_devices: int,
+                     timeout: int = 560):
+    """Run ``python -m module *args`` in one child interpreter (see
+    :func:`spawn_child_module`); asserts a zero exit and returns the
+    child's (stdout, stderr)."""
+    proc = spawn_child_module(module, args, num_devices)
+    return wait_children([proc], timeout=timeout)[0]
 
 
 def save_json(name: str, obj):

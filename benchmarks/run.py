@@ -21,6 +21,7 @@ SUITES = [
     ("table5_prior", "benchmarks.bench_prior"),
     ("fig10_usecases", "benchmarks.bench_usecases"),
     ("serve_coalescing", "benchmarks.bench_serve"),
+    ("multihost_fabric", "benchmarks.bench_multihost"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

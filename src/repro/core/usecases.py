@@ -83,7 +83,10 @@ class EbGridModel:
         feats = np.asarray(
             P.get_engine(cfg).sweep(slices, np.asarray(ebs, np.float64),
                                     mesh=mesh))
-        cr_table = DS.training_crs(comp, slices, ebs)
+        # the compressor-run partition reuses the SAME mesh the sweep
+        # sharded over (its processes), not an ad-hoc runtime-wide split
+        cr_table = DS.training_crs(comp, slices, ebs,
+                                   mesh=DS.active_sweep_mesh(mesh))
         models = []
         for i, eps in enumerate(ebs):
             models.append(PL.CRPredictor.train_from_features(

@@ -28,10 +28,35 @@ before jax is imported)::
     with S.use_mesh(M.make_sweep_mesh()):
         feats = predictors.features_sweep(slices, ebs)   # auto-sharded
 
+Multi-process fabric
+--------------------
+The same entry points accept PROCESS-SPANNING meshes: after
+``repro.launch.mesh.dist_init(...)`` on every process,
+``make_sweep_mesh()`` covers ``jax.process_count() x
+local_device_count`` devices and the sweep runs as one collective
+launch.  Two ingestion contracts:
+
+* **SPMD (default)** -- every process passes the identical global
+  (k, ...) stack; each process uploads only its contiguous block of
+  rows to its own devices (``jax.make_array_from_process_local_data``),
+  so no process ever materializes the stack on-device.
+* **process-local** (``process_local=True, global_k=``) -- each process
+  passes ONLY the rows :func:`process_block` assigns it (scale-out
+  ingestion: each host reads its own rows from disk/network).
+
+Padding generalizes across processes: the global stack is padded to a
+multiple of the mesh extent and real row *i* always lives at global
+position *i*, so the pad rows occupy the trailing positions -- they
+live on the LAST process -- and ``gather=True`` drops them /
+``gather=False`` masks them exactly like the single-process path.  The
+gather is a ``multihost_utils.process_allgather``, so every process
+returns the full (k, e, 2) tensor.
+
 Training support: ``training_crs`` partitions the *compressor* runs an
-``EbGridModel`` fit needs over processes (each host compresses only its
-contiguous block of slices) and all-gathers the (k, e) CR table, matching
-the sweep's features-all-gathered / CRs-computed-locally cost structure.
+``EbGridModel`` fit needs over the processes of the SAME sweep mesh
+(each host compresses only its contiguous block of slices) and
+all-gathers the (k, e) CR table, matching the sweep's
+features-all-gathered / CRs-computed-locally cost structure.
 """
 from __future__ import annotations
 
@@ -72,6 +97,184 @@ def slice_axes(mesh: Mesh) -> tuple:
     return axes
 
 
+# ---------------------------------------------------------------------------
+# Multi-process fabric helpers
+# ---------------------------------------------------------------------------
+
+def mesh_spans_processes(mesh: Optional[Mesh]) -> bool:
+    """True when ``mesh`` places devices on more than one process."""
+    if mesh is None:
+        return False
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
+def mesh_processes(mesh: Mesh) -> list[int]:
+    """Sorted process indices participating in ``mesh``."""
+    return sorted({d.process_index for d in mesh.devices.flat})
+
+
+def _process_position(mesh: Mesh) -> tuple[int, int]:
+    """(position of this process among the mesh's processes, #processes).
+
+    Raises when the calling process owns none of the mesh's devices --
+    such a process cannot join the collective launch and silently
+    continuing would hang the others.
+    """
+    procs = mesh_processes(mesh)
+    me = jax.process_index()
+    if me not in procs:
+        raise ValueError(
+            f"process {me} has no devices in mesh {mesh.axis_names} "
+            f"(processes {procs}); every participating process must build "
+            "the mesh over devices it contributes")
+    return procs.index(me), len(procs)
+
+
+def _device_spans(mesh: Mesh) -> dict:
+    """{process index: (first flat device position, device count)} for
+    ``mesh``, requiring each process's devices to be CONTIGUOUS in mesh
+    order (true for ``make_sweep_mesh``: ``jax.devices()`` is
+    process-ordered) so per-process row blocks are contiguous too."""
+    spans: dict = {}
+    for i, d in enumerate(mesh.devices.flat):
+        p = d.process_index
+        if p not in spans:
+            spans[p] = (i, 1)
+        else:
+            first, n = spans[p]
+            if first + n != i:
+                raise ValueError(
+                    f"mesh {mesh.axis_names} interleaves process {p}'s "
+                    "devices with other processes'; the sweep fabric "
+                    "needs contiguous per-process device blocks (build "
+                    "the mesh with launch.mesh.make_sweep_mesh)")
+            spans[p] = (first, n + 1)
+    return spans
+
+
+def process_block(k: int, mesh: Mesh) -> tuple[int, int]:
+    """[lo, hi) rows of a k-row global stack THIS process ingests.
+
+    The padded global row count ``k_pad = ceil(k / extent) * extent``
+    distributes ``k_pad / extent`` rows per device, so each process's
+    contiguous block is proportional to the devices it contributes
+    (processes may own UNEQUAL device counts, e.g. a mesh built over a
+    prefix of the global device list); blocks are clipped to the real
+    ``k``, which keeps real row *i* at global position *i* and pushes
+    every pad row to the trailing positions -- the pad lives on the
+    last process(es).
+    """
+    axes = slice_axes(mesh)
+    ext = S._mesh_extent(mesh, axes)
+    _process_position(mesh)          # membership check (clear error)
+    first, ndev = _device_spans(mesh)[jax.process_index()]
+    k_pad = -(-k // ext) * ext
+    rpd = k_pad // ext               # rows per device
+    return min(first * rpd, k), min((first + ndev) * rpd, k)
+
+
+def gather_rows(out) -> np.ndarray:
+    """Bring a (possibly process-spanning) sweep result to the host.
+
+    Fully-addressable arrays transfer directly; global arrays with
+    non-addressable shards are collectively all-gathered first (every
+    participating process must call this -- it is the sweep fabric's one
+    synchronization point).
+    """
+    if isinstance(out, jax.Array) and not out.is_fully_addressable:
+        from jax.experimental import multihost_utils
+        return np.asarray(multihost_utils.process_allgather(out, tiled=True))
+    return np.asarray(out)
+
+
+def _global_stack(local: np.ndarray, global_shape: tuple, mesh: Mesh,
+                  axes: tuple):
+    """Assemble the global padded (k_pad, ...) device array from this
+    process's padded block (``jax.make_array_from_process_local_data``:
+    each process uploads only its own rows)."""
+    part = axes[0] if len(axes) == 1 else axes
+    spec = P(part, *([None] * (len(global_shape) - 1)))
+    return jax.make_array_from_process_local_data(
+        NamedSharding(mesh, spec), local, global_shape)
+
+
+def _replicated(x: np.ndarray, mesh: Mesh):
+    """A globally-replicated device array from identical per-process
+    host values (error-bound vectors, masks)."""
+    sh = NamedSharding(mesh, P(*([None] * x.ndim)))
+    return jax.make_array_from_process_local_data(sh, x, x.shape)
+
+
+def _pad_block(block: np.ndarray, per: int, shape_tail: tuple,
+               dtype) -> np.ndarray:
+    """Pad a process's local row block to its ``per``-row device block.
+
+    Pad rows repeat the block's last real row (keeps the eigensolve and
+    the q-ent sort numerically unexceptional); a process with NO real
+    rows (k far below the mesh extent) feeds zeros -- pad rows are
+    dropped or masked downstream, so their values never surface.
+    """
+    n = block.shape[0]
+    if n == per:
+        return np.ascontiguousarray(block)
+    if n == 0:
+        return np.zeros((per,) + shape_tail, dtype)
+    return np.concatenate(
+        [block, np.broadcast_to(block[-1:], (per - n,) + shape_tail)], axis=0)
+
+
+def _features_sweep_multihost(slices, epss, cfg, mesh: Mesh, gather: bool,
+                              process_local: bool, global_k: Optional[int]):
+    """Process-spanning sweep launch (see module docstring): per-process
+    ingestion -> one collective shard_map -> ``process_allgather``."""
+    from repro.core import predictors as PRED
+    axes = slice_axes(mesh)
+    ext = S._mesh_extent(mesh, axes)
+    _process_position(mesh)          # membership check (clear error)
+    host = np.asarray(slices)
+
+    if process_local:
+        if global_k is None:
+            raise ValueError(
+                "process_local=True needs global_k= (the total row count "
+                "across processes; each process passes only the rows "
+                "process_block(global_k, mesh) assigns it)")
+        k = int(global_k)
+        lo, hi = process_block(k, mesh)
+        if host.shape[0] != hi - lo:
+            raise ValueError(
+                f"process {jax.process_index()} must ingest rows "
+                f"[{lo}, {hi}) of the {k}-row global stack, got "
+                f"{host.shape[0]} rows (use process_block to split)")
+        local = host
+    else:
+        k = host.shape[0]
+        lo, hi = process_block(k, mesh)
+        local = host[lo:hi]
+
+    k_pad = -(-k // ext) * ext
+    # this process's device block is proportional to the devices it
+    # contributes (per-process shares may be unequal)
+    _, ndev = _device_spans(mesh)[jax.process_index()]
+    per = (k_pad // ext) * ndev
+    local = _pad_block(local, per, host.shape[1:], host.dtype)
+    garr = _global_stack(local, (k_pad,) + host.shape[1:], mesh, axes)
+    eps_np = np.asarray(epss, np.float32).reshape(-1)
+    eps_g = _replicated(eps_np, mesh)
+
+    out = _sharded_sweep_fn(
+        mesh, axes, host.ndim,
+        PRED.variance_fraction_for(cfg, host.ndim), cfg.qent_bins,
+        cfg.use_kernels)(garr, eps_g)
+
+    if gather:
+        return jnp.asarray(gather_rows(out)[:k])
+    if k_pad > k:                                       # mask pad rows
+        mask = (np.arange(k_pad) < k).astype(np.float32).reshape(-1, 1, 1)
+        out = out * _replicated(mask, mesh)
+    return out
+
+
 @functools.lru_cache(maxsize=32)
 def _sharded_sweep_fn(mesh: Mesh, axes: tuple, rank: int, vf: float,
                       bins: int, use_kernels: bool):
@@ -105,6 +308,8 @@ def features_sweep_sharded(
     *,
     mesh: Optional[Mesh] = None,
     gather: bool = True,
+    process_local: bool = False,
+    global_k: Optional[int] = None,
 ) -> jnp.ndarray:
     """``features_sweep`` sharded over the slice axis of ``mesh``.
 
@@ -114,6 +319,14 @@ def features_sweep_sharded(
     Volume stacks shard the k axis exactly like slice stacks do (each
     device runs the batched HOSVD + q-ent body on its local shard).
 
+    Process-spanning meshes run the collective multihost path (module
+    docstring): every participating process must make this call with the
+    same shapes.  ``process_local=True`` (with ``global_k=``) switches
+    the ingestion contract from "identical global stack on every
+    process" to "each process passes only its :func:`process_block`
+    rows"; with ``gather=True`` every process still returns the full
+    (k, e, 2) tensor (``process_allgather``).
+
     Falls back to the single-device engine when no mesh (or an extent-1
     mesh) is available, so callers can route unconditionally.
     """
@@ -121,12 +334,23 @@ def features_sweep_sharded(
     cfg = cfg if cfg is not None else PRED.PredictorConfig()
     mesh = active_sweep_mesh(mesh)
     if mesh is None:
+        if process_local:
+            raise ValueError(
+                "process_local=True needs a process-spanning mesh "
+                "(dist_init + make_sweep_mesh); no usable mesh is active")
         return PRED.features_sweep(slices, epss, cfg, sharded=False)
     if slices.ndim not in (3, 4):
         raise ValueError(
             f"features_sweep_sharded expects (k, m, n) or (k, d, m, n), "
             f"got {slices.shape}")
     PRED._validate_eps_positive(epss)
+    if mesh_spans_processes(mesh):
+        return _features_sweep_multihost(
+            slices, epss, cfg, mesh, gather, process_local, global_k)
+    if process_local:
+        raise ValueError(
+            "process_local=True is only meaningful on a process-spanning "
+            f"mesh; mesh {mesh.axis_names} lives on one process")
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
 
     axes = slice_axes(mesh)
@@ -181,6 +405,14 @@ def sweep_padded(
     * otherwise (no mesh, or a bucket below the extent) -> the
       single-device fused engine.
 
+    Process-spanning meshes launch collectively: every participating
+    process calls ``sweep_padded`` with the same (stack, epss, k_pad)
+    -- the sweep service's leader/follower mode broadcasts exactly these
+    -- and the returned global array's shards stay on their processes
+    until ``gather_rows``/``scatter_requests`` all-gathers them.  A
+    bucket below the global extent drops every process to the identical
+    local computation, so the branch stays deadlock-free.
+
     Returns the PADDED (k_pad, e, 2) result; rows past the true batch are
     garbage-by-construction (copies of the last slice) and the caller
     scatters only real rows back to requests (``scatter_requests``).
@@ -220,11 +452,13 @@ def scatter_requests(out, sizes: Sequence[int]) -> list:
     per-request row blocks.
 
     ONE host transfer for the whole batch (for the ``gather=False``
-    sharded layout this is the only gather point); ``sizes`` are the
-    per-request row counts in stacking order, and trailing pad rows are
-    dropped.  Returns a list of (sizes[i], e, 2) numpy arrays.
+    sharded layout this is the only gather point; process-spanning
+    results are collectively all-gathered, so every participating
+    process must reach this call); ``sizes`` are the per-request row
+    counts in stacking order, and trailing pad rows are dropped.
+    Returns a list of (sizes[i], e, 2) numpy arrays.
     """
-    host = np.asarray(out)
+    host = gather_rows(out)
     total = int(np.sum(sizes)) if len(sizes) else 0
     if total > host.shape[0]:
         raise ValueError(
@@ -249,18 +483,28 @@ def _even_bounds(k: int, parts: int, index: int) -> tuple[int, int]:
     return lo, lo + base + (1 if index < rem else 0)
 
 
-def training_crs(comp, slices, ebs: Sequence[float]) -> np.ndarray:
+def training_crs(comp, slices, ebs: Sequence[float], *,
+                 mesh: Optional[Mesh] = None) -> np.ndarray:
     """The (k, e) compression-ratio table an ``EbGridModel`` fit needs,
     with the compressor executions partitioned over processes.
 
     Each process runs the (host-side, numpy) compressor only on its
     contiguous block of slices and the table is all-gathered, so the
     expensive training-time compressor runs scale out with hosts exactly
-    like the featurization sweep scales out with devices.  Single-process
-    (tests, CI) reduces to the plain full loop.
+    like the featurization sweep scales out with devices.  The partition
+    is MESH-driven: pass the same process-spanning sweep mesh the
+    featurization sharded over and the compressor runs split across that
+    mesh's processes (every one of them must make this call -- the
+    gather is collective).  Without a process-spanning mesh this is the
+    plain full local loop, so single-process callers (tests, CI, a
+    service leader training models on the side) never block on a
+    collective.
     """
     k = len(slices)
-    parts, index = jax.process_count(), jax.process_index()
+    if mesh_spans_processes(mesh):
+        index, parts = _process_position(mesh)
+    else:
+        parts, index = 1, 0
     lo, hi = _even_bounds(k, parts, index)
     table = np.zeros((k, len(ebs)), np.float64)
     for i in range(lo, hi):
@@ -270,6 +514,11 @@ def training_crs(comp, slices, ebs: Sequence[float]) -> np.ndarray:
         return table
     from jax.experimental import multihost_utils
     # non-local rows are zero, so summing the per-process tables
-    # reconstructs the full (k, e) table
-    stacked = multihost_utils.process_allgather(jnp.asarray(table))
-    return np.asarray(stacked).sum(axis=0)
+    # reconstructs the full (k, e) table.  The gather moves the raw f64
+    # BYTES (uint8 payload): jnp would silently downcast float64 to f32
+    # under the default x64-disabled config, and training tables must be
+    # identical to the serial loop.
+    payload = np.frombuffer(table.tobytes(), np.uint8)
+    stacked = np.asarray(multihost_utils.process_allgather(payload))
+    return sum(np.frombuffer(stacked[p].tobytes(), np.float64)
+               .reshape(table.shape) for p in range(stacked.shape[0]))

@@ -19,6 +19,40 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def dist_init(coordinator_address: str | None = None, *,
+              num_processes: int | None = None,
+              process_id: int | None = None,
+              cpu_collectives: str = "gloo") -> tuple[int, int]:
+    """Join the multi-process sweep fabric: ``jax.distributed`` init.
+
+    Call ONCE per process, before any other jax use, on every process
+    that will participate in a process-spanning sweep mesh.  Arguments
+    left ``None`` fall back to jax's environment autodetection
+    (``JAX_COORDINATOR_ADDRESS`` etc., or the cluster plugin on managed
+    fleets).  On the CPU backend the collective implementation defaults
+    to gloo, which is what the two-process test harness and the
+    ``bench_multihost`` gate run on; combine with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (exported
+    before jax is imported) for N virtual devices per process.
+
+    Returns ``(process_index, process_count)``.
+    """
+    try:
+        jax.config.update("jax_cpu_collectives_implementation",
+                          cpu_collectives)
+    except Exception:
+        pass                 # older jax: CPU collectives not configurable
+    kw = {}
+    if coordinator_address is not None:
+        kw["coordinator_address"] = coordinator_address
+    if num_processes is not None:
+        kw["num_processes"] = num_processes
+    if process_id is not None:
+        kw["process_id"] = process_id
+    jax.distributed.initialize(**kw)
+    return jax.process_index(), jax.process_count()
+
+
 def make_sweep_mesh(num_devices: int | None = None):
     """1-D ("data",) mesh for distributed featurization sweeps.
 
@@ -27,9 +61,33 @@ def make_sweep_mesh(num_devices: int | None = None):
     serves one sweep from every device/host.  On a CPU dev box export
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax is
     imported to get N virtual devices.
+
+    Process-aware: under an initialized ``jax.distributed`` runtime (see
+    :func:`dist_init`) ``jax.devices()`` is the GLOBAL device list
+    (``jax.process_count() x local_device_count``), so the default mesh
+    spans every process and each process later feeds its own block of
+    the slice axis (``repro.dist.sweep`` handles the per-process
+    ingestion and gather).  Asking for more devices than the runtime has
+    -- in particular asking for a process-spanning mesh when
+    ``jax.distributed`` was never initialized -- raises immediately with
+    a clear error instead of hanging in a half-joined collective.
     """
-    n = num_devices if num_devices is not None else len(jax.devices())
-    return jax.make_mesh((n,), ("data",))
+    devs = jax.devices()
+    n = num_devices if num_devices is not None else len(devs)
+    if n < 1:
+        raise ValueError(f"make_sweep_mesh needs >= 1 device, got {n}")
+    if n > len(devs):
+        local = jax.local_device_count()
+        hint = ""
+        if jax.process_count() == 1 and n > local:
+            hint = (" -- a mesh spanning more than this process's "
+                    f"{local} local device(s) needs the multi-process "
+                    "fabric: call repro.launch.mesh.dist_init(...) on "
+                    "every participating process before building the mesh")
+        raise ValueError(
+            f"make_sweep_mesh({n}) exceeds the {len(devs)} visible "
+            f"device(s) of this runtime{hint}")
+    return jax.make_mesh((n,), ("data",), devices=devs[:n])
 
 
 # TPU v5e hardware model used by the roofline analysis (per chip).

@@ -7,6 +7,17 @@ throughput, latency quantiles, and cache/launch statistics.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     python -m repro.launch.sweep_serve --clients 8 --requests 64 --mesh auto
+
+Multi-process fabric (one command per process; process 0 is the leader
+that trains the models and runs the clients, the rest serve as
+followers)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+    python -m repro.launch.sweep_serve --mesh auto \\
+        --coordinator 127.0.0.1:7654 --num-processes 2 --process-id 0 &
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+    python -m repro.launch.sweep_serve --mesh auto \\
+        --coordinator 127.0.0.1:7654 --num-processes 2 --process-id 1
 """
 from __future__ import annotations
 
@@ -15,8 +26,16 @@ import threading
 import time
 
 import numpy as np
-import jax
-import jax.numpy as jnp
+
+
+def _exit_barrier():
+    """Align process teardown on the multi-process fabric: a final
+    collective barrier guarantees every in-flight gloo op has completed
+    on all processes before any of them starts closing transports
+    (otherwise a fast-exiting peer can reset connections under a slower
+    one and abort it at interpreter shutdown)."""
+    from jax.experimental import multihost_utils
+    multihost_utils.sync_global_devices("sweep_serve_exit")
 
 
 def main():
@@ -35,12 +54,26 @@ def main():
     ap.add_argument("--cache-bytes", type=int, default=4 << 20)
     ap.add_argument("--mesh", default=None,
                     help="'auto' = 1-D all-device sweep mesh")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port of process 0 -> join the "
+                         "jax.distributed multi-process fabric")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
     args = ap.parse_args()
 
+    from repro.launch import mesh as M
+    if args.coordinator is not None:
+        # must run before any other jax use (device counts lock at init)
+        pid, nproc = M.dist_init(args.coordinator,
+                                 num_processes=args.num_processes,
+                                 process_id=args.process_id)
+        print(f"# joined fabric: process {pid}/{nproc}")
+
+    import jax
+    import jax.numpy as jnp
     from repro import compressors as C
     from repro.core import pipeline as PL, usecases as UC
     from repro.data import scientific
-    from repro.launch import mesh as M
     from repro.serve.sweep_service import ServiceConfig, SweepService
 
     mesh = None
@@ -50,6 +83,31 @@ def main():
         shape = tuple(int(x) for x in args.mesh.split("x"))
         mesh = jax.make_mesh(shape, ("data",) if len(shape) == 1
                              else ("data", "model"))
+
+    if args.coordinator is not None:
+        from repro.dist import sweep as DS
+        if not DS.mesh_spans_processes(mesh):
+            # fail loudly on every process: a non-spanning mesh would
+            # leave followers serving a service that never stops and the
+            # leader blocked in the exit barrier
+            raise SystemExit(
+                "--coordinator needs a process-spanning mesh: pass "
+                "--mesh auto (or a shape covering every process's "
+                "devices)")
+
+    if args.coordinator is not None and jax.process_index() != 0:
+        # follower: contribute this process's devices until the leader
+        # closes the fabric -- no local clients, no model training
+        scfg = ServiceConfig(max_batch_slices=args.max_batch,
+                             max_wait_ms=args.max_wait_ms,
+                             cache_bytes=args.cache_bytes)
+        svc = SweepService(scfg, mesh=mesh)
+        print(f"# follower {jax.process_index()} serving ...", flush=True)
+        svc.serve()
+        print(f"# follower {jax.process_index()} done "
+              f"({svc.launches} collective launches joined)")
+        _exit_barrier()
+        return
 
     fields = args.fields.split(",")
     print(f"# training {args.compressor} grid models on {fields} ...")
@@ -118,7 +176,9 @@ def main():
           f"executables={stats['executables']}")
     print(f"cache: hit_rate={cache['hits'] / max(total_probes, 1):.2%} "
           f"({cache['hits']}/{total_probes}), entries={cache['entries']}, "
-          f"bytes={cache['bytes']}")
+          f"bytes={cache['bytes']}", flush=True)
+    if args.coordinator is not None:
+        _exit_barrier()
 
 
 if __name__ == "__main__":

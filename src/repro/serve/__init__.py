@@ -26,4 +26,12 @@ Sweep service (``repro.serve.sweep_service``)
     the sweep body is row-independent (asserted by
     ``tests/test_sweep_service.py`` and gated by
     ``benchmarks/bench_serve.py``).
+
+    On a process-spanning mesh (``repro.launch.mesh.dist_init`` +
+    ``make_sweep_mesh``) the service runs leader/follower: the mesh's
+    first process owns the queue and the public API, every other
+    process joins the collective launches via ``serve()``
+    (bit-exactness across the process boundary gated by
+    ``benchmarks/bench_multihost.py``; lifecycle and sizing guidance in
+    ``docs/serving.md``).
 """

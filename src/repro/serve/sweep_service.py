@@ -34,6 +34,30 @@ is row-independent and per-eps-independent, UC1 bisection runs the exact
 ``usecases`` code on a seeded ``SliceCache``, and UC2 ranking feeds the
 shared rows through the exact ``best_compressor`` model evaluation.
 
+Cache admission: one-shot cold fields are NOT cached.  A slice's rows are
+admitted only once its content hash has been sighted by
+``cache_admit_after`` distinct requests (default 2) -- concurrent
+requests for the same slice inside one batch count individually, so a
+hot field entering with simultaneous UC1+UC2 traffic is admitted on its
+very first launch, while a scan over thousands of distinct cold slices
+never evicts the working set.
+
+Multi-process leader/follower mode
+----------------------------------
+Constructed on a PROCESS-SPANNING mesh (``repro.launch.mesh.dist_init``
++ ``make_sweep_mesh``), the service splits roles: the mesh's first
+process is the **leader** -- it owns the micro-batching queue, the
+cache, and the public ``submit_*`` API -- and every other process is a
+**follower** that blocks in :meth:`serve` joining each collective
+launch.  Per launch the leader broadcasts a fixed-size header (batch
+rows, trailing shape, eps length, ``k_pad``) and then the slice stack +
+eps union (``multihost_utils.broadcast_one_to_all``); both sides enter
+the same ``dist.sweep.sweep_padded`` collective, and the scatter-back
+all-gather is the single synchronization point.  ``close()`` on the
+leader drains the queue and broadcasts a shutdown header that releases
+the followers.  All processes must construct the service with the same
+``ServiceConfig`` (the engine config is not re-broadcast per launch).
+
 Usage::
 
     from repro.serve.sweep_service import SweepService, ServiceConfig
@@ -42,6 +66,10 @@ Usage::
         f2 = svc.submit_best_compressor(models, slice_b, eps)
         f3 = svc.submit_featurize(stack, ebs)
         eps, cr = f1.result()
+
+    # multi-process: leader (process 0) runs the block above; followers:
+    svc = SweepService(mesh=my_mesh)
+    svc.serve()                                    # until leader close()
 """
 from __future__ import annotations
 
@@ -54,7 +82,6 @@ from concurrent.futures import Future
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-import jax.numpy as jnp
 
 from repro.core import predictors as P
 from repro.core import usecases as UC
@@ -101,26 +128,56 @@ class ServiceConfig:
     max_wait_ms: float = 2.0         # ... or the oldest request waited this
     cache_bytes: int = 4 << 20       # cross-request feature-cache budget
     max_eps_per_launch: int = 32     # chunk wider eps unions across launches
+    cache_admit_after: int = 2       # sightings before a digest is cached
     pcfg: P.PredictorConfig = dataclasses.field(
         default_factory=P.PredictorConfig)
 
 
 class FeatureCache:
     """Cross-request feature cache: (slice digest, engine config) ->
-    {f32 eb -> (2,) feature row}, LRU over slices with a byte budget."""
+    {f32 eb -> (2,) feature row}, LRU over slices with a byte budget.
+
+    Admission policy: a digest's rows are stored only once it has been
+    *sighted* (``record_sighting``, one count per request touching the
+    digest) at least ``admit_after`` times, so one-shot cold fields pass
+    through without polluting the LRU ring.  ``admit_after=1`` (the
+    class default, kept for direct users) admits on first touch; the
+    sweep service passes ``ServiceConfig.cache_admit_after`` (default
+    2).  The sighting ring is a bounded FIFO of bare digests -- a few
+    bytes per cold field, never row data.
+    """
 
     ROW_BYTES = 2 * 4
     ENTRY_OVERHEAD = 128             # digest + dict bookkeeping estimate
 
-    def __init__(self, max_bytes: int):
+    def __init__(self, max_bytes: int, admit_after: int = 1,
+                 seen_capacity: int = 65536):
         self.max_bytes = int(max_bytes)
+        self.admit_after = max(1, int(admit_after))
+        self.seen_capacity = int(seen_capacity)
         self._entries: "collections.OrderedDict[tuple, dict]" = \
+            collections.OrderedDict()
+        self._seen: "collections.OrderedDict[tuple, int]" = \
             collections.OrderedDict()
         self._bytes = 0
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.admissions_denied = 0
         self._lock = threading.Lock()
+
+    def record_sighting(self, key: tuple, n: int = 1) -> int:
+        """Count a request touching ``key``; returns the running total.
+        Admitted digests stop counting (their entry is the signal)."""
+        with self._lock:
+            if key in self._entries:
+                return self.admit_after
+            seen = self._seen.get(key, 0) + n
+            self._seen[key] = seen
+            self._seen.move_to_end(key)
+            while len(self._seen) > self.seen_capacity:
+                self._seen.popitem(last=False)
+            return seen
 
     def get(self, key: tuple, eps_key: float) -> Optional[np.ndarray]:
         with self._lock:
@@ -132,10 +189,17 @@ class FeatureCache:
             self.hits += 1
             return ent[eps_key]
 
-    def put(self, key: tuple, eps_key: float, row: np.ndarray) -> None:
+    def put(self, key: tuple, eps_key: float, row: np.ndarray) -> bool:
+        """Store one (digest, eb) row; returns False when the admission
+        policy rejects the (cold, under-sighted) digest."""
         with self._lock:
             ent = self._entries.get(key)
             if ent is None:
+                if self.admit_after > 1 and \
+                        self._seen.get(key, 0) < self.admit_after:
+                    self.admissions_denied += 1
+                    return False
+                self._seen.pop(key, None)
                 ent = self._entries[key] = {}
                 self._bytes += self.ENTRY_OVERHEAD
             if eps_key not in ent:
@@ -148,6 +212,7 @@ class FeatureCache:
                 _, old = self._entries.popitem(last=False)
                 self._bytes -= self.ENTRY_OVERHEAD + self.ROW_BYTES * len(old)
                 self.evictions += 1
+            return True
 
     @property
     def nbytes(self) -> int:
@@ -160,7 +225,9 @@ class FeatureCache:
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions, "entries": len(self),
-                    "bytes": self._bytes}
+                    "bytes": self._bytes,
+                    "admissions_denied": self.admissions_denied,
+                    "pending_sightings": len(self._seen)}
 
 
 @dataclasses.dataclass
@@ -194,10 +261,14 @@ class SweepService:
     mesh context.
     """
 
+    HDR_LEN = 8                      # [op, k, k_pad, rank, t0, t1, t2, e_pad]
+    OP_SHUTDOWN, OP_LAUNCH = 0, 1
+
     def __init__(self, scfg: Optional[ServiceConfig] = None, *, mesh=None):
         self.scfg = scfg if scfg is not None else ServiceConfig()
         self.mesh = DS.active_sweep_mesh(mesh)
-        self.cache = FeatureCache(self.scfg.cache_bytes)
+        self.cache = FeatureCache(self.scfg.cache_bytes,
+                                  admit_after=self.scfg.cache_admit_after)
         self._queue: "collections.deque[_Request]" = collections.deque()
         self._cond = threading.Condition()
         self._stop = False
@@ -207,13 +278,37 @@ class SweepService:
         self._batches = 0
         self._requests = collections.Counter()
         self._executables: set = set()   # (mesh shape, k_pad, m, n, e_pad, cfg)
+        # leader/follower roles on a process-spanning mesh: the mesh's
+        # first process owns the queue, everyone else joins collectives
+        self._multiproc = DS.mesh_spans_processes(self.mesh)
+        if self._multiproc:
+            import jax
+            self.role = ("leader" if jax.process_index() ==
+                         DS.mesh_processes(self.mesh)[0] else "follower")
+        else:
+            self.role = "leader"
+        # serializes collective launches on the leader (worker batches vs
+        # main-thread warmup/close): followers see one header stream
+        self._launch_lock = threading.Lock()
+        target = self._loop if self.role == "leader" else self._follower_loop
         self._worker = threading.Thread(
-            target=self._loop, name="sweep-service", daemon=True)
+            target=target, name=f"sweep-service-{self.role}", daemon=True)
         self._worker.start()
 
     # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
+
+    def _check_cfg(self, cfg: P.PredictorConfig) -> P.PredictorConfig:
+        """Leader/follower launches carry no per-request engine config
+        (the header is fixed-size and followers compiled against the
+        service config), so multi-process services accept only it."""
+        if self._multiproc and cfg != self.scfg.pcfg:
+            raise ValueError(
+                "multi-process SweepService serves only its configured "
+                "engine config (ServiceConfig.pcfg); per-request configs "
+                "are a single-process feature")
+        return cfg
 
     def submit_featurize(self, slices, epss,
                          cfg: Optional[P.PredictorConfig] = None) -> Future:
@@ -222,7 +317,7 @@ class SweepService:
         ``features_sweep(slices, epss)``.  Batching/digests are keyed by
         the trailing shape, so volume requests coalesce with each other
         exactly like slice requests do."""
-        cfg = cfg if cfg is not None else self.scfg.pcfg
+        cfg = self._check_cfg(cfg if cfg is not None else self.scfg.pcfg)
         arr = np.asarray(slices, np.float32)
         if arr.ndim not in (3, 4):
             raise ValueError(
@@ -241,7 +336,7 @@ class SweepService:
         """UC1 through the service: Future[(eps, predicted_cr)], bit-equal
         to ``usecases.find_error_bound_for_cr``.  The grid featurization
         comes from the shared launch / cross-request cache."""
-        cfg = grid_model.cfg
+        cfg = self._check_cfg(grid_model.cfg)
         x = np.asarray(data, np.float32)
         if x.ndim != grid_model.ndim:
             # validate at submit time: a worker-side failure would poison
@@ -262,7 +357,7 @@ class SweepService:
         to ``usecases.best_compressor``."""
         if not models:
             raise ValueError("submit_best_compressor needs trained models")
-        cfg = next(iter(models.values())).cfg
+        cfg = self._check_cfg(next(iter(models.values())).cfg)
         ndims = {m.ndim for m in models.values()}
         x = np.asarray(data, np.float32)
         if len(ndims) > 1 or x.ndim != next(iter(ndims)):
@@ -288,7 +383,8 @@ class SweepService:
         return self.submit_best_compressor(models, data, eps).result()
 
     def stats(self) -> dict:
-        return {"launches": self._launches,
+        return {"role": self.role,
+                "launches": self._launches,
                 "rows_launched": self._rows_launched,
                 "pad_rows": self._pad_rows,
                 "batches": self._batches,
@@ -306,26 +402,63 @@ class SweepService:
                cfg: Optional[P.PredictorConfig] = None) -> None:
         """Pre-compile the bucketed executables for the expected traffic
         (slice (m, n) / volume (d, m, n) shapes x eps-grid sizes x row
-        buckets) so first requests don't pay compile latency."""
-        cfg = cfg if cfg is not None else self.scfg.pcfg
+        buckets) so first requests don't pay compile latency.  On a
+        process-spanning mesh the leader's warmup launches ride the
+        collective fabric, so followers precompile the same executables
+        (followers themselves call :meth:`serve`, not ``warmup``)."""
+        if self.role == "follower":
+            raise RuntimeError(
+                "warmup runs on the leader; followers precompile by "
+                "joining its collective warmup launches via serve()")
+        cfg = self._check_cfg(cfg if cfg is not None else self.scfg.pcfg)
         for shape in shapes:
             shape = tuple(shape)
             x = np.zeros((1,) + shape, np.float32)
             for e in grid_sizes:
                 for k in row_buckets:
                     k_pad, e_pad = _row_bucket(k), _eps_bucket(e)
-                    out = DS.sweep_padded(
-                        jnp.asarray(x), np.full((e_pad,), 1.0, np.float32),
-                        cfg, k_pad=k_pad, mesh=self.mesh)
-                    np.asarray(out)
+                    out = self._collective_sweep(
+                        x, np.full((e_pad,), 1.0, np.float32), cfg, k_pad)
+                    np.asarray(DS.gather_rows(out))
                     self._executables.add(self._sig(k_pad, shape, e_pad, cfg))
 
+    def serve(self) -> None:
+        """Block until the service stops.
+
+        The follower's main loop: joins collective launches until the
+        leader's ``close()`` broadcasts shutdown.  On a leader this just
+        waits for ``close()`` from another thread.  Raises if the worker
+        died on an error instead of a clean shutdown (a silently-exited
+        follower would wedge the leader's next collective).
+        """
+        self._worker.join()
+        err = getattr(self, "_fabric_error", None)
+        if err is not None:
+            raise RuntimeError(
+                f"sweep-service {self.role} worker died; the fabric is "
+                "wedged (restart every process)") from err
+
     def close(self) -> None:
-        """Flush pending requests and stop the worker thread."""
+        """Flush pending requests and stop the worker thread.
+
+        Leader of a multi-process service: after the queue drains, a
+        shutdown header releases every follower out of :meth:`serve`.
+        Follower: blocks until the leader shuts the fabric down.
+        """
+        if self.role == "follower":
+            self._worker.join()
+            return
         with self._cond:
+            if self._stop:
+                return
             self._stop = True
             self._cond.notify_all()
         self._worker.join()
+        if self._multiproc:
+            from jax.experimental import multihost_utils as MH
+            with self._launch_lock:
+                MH.broadcast_one_to_all(
+                    np.zeros(self.HDR_LEN, np.int64))     # OP_SHUTDOWN
 
     def __enter__(self) -> "SweepService":
         return self
@@ -338,6 +471,10 @@ class SweepService:
     # ------------------------------------------------------------------
 
     def _submit(self, req: _Request) -> Future:
+        if self.role == "follower":
+            raise RuntimeError(
+                "follower processes don't accept requests; submit to the "
+                "leader (the mesh's first process) and call serve() here")
         with self._cond:
             if self._stop:
                 raise RuntimeError("SweepService is closed")
@@ -396,6 +533,72 @@ class SweepService:
                     else (self.mesh.axis_names, self.mesh.devices.shape))
         return (mesh_key, k_pad, shape, e_pad, cfg)
 
+    # ------------------------------------------------------------------
+    # collective launch fabric (leader/follower)
+    # ------------------------------------------------------------------
+
+    def _collective_sweep(self, stack: np.ndarray, epss: np.ndarray,
+                          cfg: P.PredictorConfig, k_pad: int):
+        """One ``sweep_padded`` launch.  Single-process: returns the
+        (possibly still device-sharded) padded result.  Process-spanning
+        mesh: broadcasts the launch descriptor + payload so followers
+        enter the same collective, and returns the all-gathered host
+        (k_pad, e, 2) array."""
+        if not self._multiproc:
+            return DS.sweep_padded(stack, epss, cfg, k_pad=k_pad,
+                                   mesh=self.mesh)
+        from jax.experimental import multihost_utils as MH
+        trailing = stack.shape[1:]
+        hdr = np.zeros(self.HDR_LEN, np.int64)
+        hdr[0], hdr[1], hdr[2], hdr[3] = (
+            self.OP_LAUNCH, stack.shape[0], k_pad, stack.ndim)
+        hdr[4 + (3 - len(trailing)):7] = trailing
+        hdr[7] = len(epss)
+        with self._launch_lock:
+            MH.broadcast_one_to_all(hdr)
+            # both sides consume the broadcast copies, so leader and
+            # followers feed byte-identical inputs to the collective
+            stack = np.asarray(MH.broadcast_one_to_all(
+                np.ascontiguousarray(stack, np.float32)))
+            epss = np.asarray(MH.broadcast_one_to_all(
+                np.ascontiguousarray(epss, np.float32)))
+            out = DS.sweep_padded(stack, epss, cfg, k_pad=k_pad,
+                                  mesh=self.mesh)
+            return DS.gather_rows(out)
+
+    def _follower_loop(self) -> None:
+        """Mirror the leader's header stream: join every collective
+        launch with the broadcast payload until shutdown."""
+        import traceback
+        from jax.experimental import multihost_utils as MH
+        try:
+            while True:
+                hdr = np.asarray(MH.broadcast_one_to_all(
+                    np.zeros(self.HDR_LEN, np.int64)))
+                if int(hdr[0]) == self.OP_SHUTDOWN:
+                    return
+                k, k_pad, rank = int(hdr[1]), int(hdr[2]), int(hdr[3])
+                trailing = tuple(int(d) for d in hdr[4 + (3 - (rank - 1)):7])
+                stack = np.asarray(MH.broadcast_one_to_all(
+                    np.zeros((k,) + trailing, np.float32)))
+                epss = np.asarray(MH.broadcast_one_to_all(
+                    np.zeros(int(hdr[7]), np.float32)))
+                out = DS.sweep_padded(stack, epss, self.scfg.pcfg,
+                                      k_pad=k_pad, mesh=self.mesh)
+                DS.gather_rows(out)
+                self._launches += 1
+                self._rows_launched += k
+                self._pad_rows += k_pad - k
+                self._executables.add(self._sig(k_pad, trailing,
+                                                len(epss), self.scfg.pcfg))
+        except BaseException as exc:     # noqa: BLE001 -- must not die
+            # a dead follower would wedge the leader's next collective;
+            # record + surface the error loudly so serve() re-raises
+            # instead of returning as if shutdown completed cleanly
+            self._fabric_error = exc
+            traceback.print_exc()
+            raise
+
     def _process(self, batch: List[_Request]) -> None:
         self._batches += 1
         # 1. resolve the cross-request cache; group the misses by
@@ -403,6 +606,13 @@ class SweepService:
         #    unioning the error bounds each digest needs
         local: Dict[Tuple[tuple, float], np.ndarray] = {}
         need: Dict[tuple, dict] = {}
+        for req in batch:
+            # one sighting per REQUEST touching the digest (duplicates
+            # within one request's stack don't count): the admission
+            # policy caches a field only once >= admit_after requests
+            # wanted it (concurrent in-batch requests count)
+            for key in {it.key for it in req.items}:
+                self.cache.record_sighting(key)
         for req in batch:
             for it in req.items:
                 for ek in it.eps_keys:
@@ -433,14 +643,14 @@ class SweepService:
                 cfg: P.PredictorConfig,
                 local: Dict[Tuple[tuple, float], np.ndarray]) -> None:
         order = list(digests)
-        stack = jnp.asarray(np.stack([digests[key][0] for key in order]))
+        stack = np.stack([digests[key][0] for key in order])
         k = len(order)
         k_pad = _row_bucket(k)
         e_pad = _eps_bucket(len(eps_chunk))
         epss = np.asarray(
             eps_chunk + [eps_chunk[-1]] * (e_pad - len(eps_chunk)),
             np.float32)
-        out = DS.sweep_padded(stack, epss, cfg, k_pad=k_pad, mesh=self.mesh)
+        out = self._collective_sweep(stack, epss, cfg, k_pad)
         # scatter-back: ONE host transfer for the whole coalesced batch,
         # split into per-digest row blocks (pad rows dropped)
         blocks = DS.scatter_requests(out, [1] * k)

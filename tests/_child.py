@@ -1,10 +1,14 @@
-"""Shared child-interpreter helper for multi-device tests.
+"""Shared child-interpreter helpers for multi-device/multi-process tests.
 
 The main pytest process must keep the default single CPU device (jax
 locks the device count at first init), so every sharded scenario runs in
 a child interpreter with XLA_FLAGS set before importing jax.
+``run_procs`` extends this to the multi-process fabric: N children join a
+``jax.distributed`` coordinator on a free localhost port and run the SAME
+body SPMD (``PID``/``NPROCS`` are injected).
 """
 import os
+import socket
 import subprocess
 import sys
 import textwrap
@@ -12,12 +16,63 @@ import textwrap
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
-def run_child(body: str, devices: int = 8) -> str:
+def _env(devices: int) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    code = textwrap.dedent(body)
-    proc = subprocess.run([sys.executable, "-c", code], env=env,
-                          capture_output=True, text=True, timeout=560)
+    return env
+
+
+def run_child(body: str, devices: int = 8) -> str:
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                          env=_env(devices), capture_output=True, text=True,
+                          timeout=560)
     assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
     return proc.stdout
+
+
+def free_port() -> int:
+    """A free localhost TCP port for a jax.distributed coordinator."""
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_procs(body: str, num_procs: int = 2, devices: int = 4,
+              timeout: int = 560) -> list:
+    """Run ``body`` SPMD in ``num_procs`` jax.distributed child processes.
+
+    Each child gets ``devices`` virtual CPU devices and a preamble that
+    joins the coordinator (``repro.launch.mesh.dist_init`` with gloo CPU
+    collectives) before the body runs; the body sees ``PID`` (process
+    index) and ``NPROCS``.  Asserts every child exits 0 and returns the
+    per-process stdouts in process order.
+    """
+    port = free_port()
+    code = textwrap.dedent(body)
+    procs = []
+    for pid in range(num_procs):
+        preamble = textwrap.dedent(f"""
+            PID, NPROCS = {pid}, {num_procs}
+            from repro.launch import mesh as _M
+            _M.dist_init("127.0.0.1:{port}", num_processes=NPROCS,
+                         process_id=PID)
+        """)
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", preamble + code], env=_env(devices),
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True))
+    try:
+        outs = [p.communicate(timeout=timeout) for p in procs]
+    except subprocess.TimeoutExpired:
+        for p in procs:                   # a hung collective: reap them all
+            p.kill()
+        outs = [p.communicate() for p in procs]
+        raise AssertionError(
+            "multi-process children timed out (hung collective?):\n" +
+            "\n".join(f"--- proc {i} ---\n{o}\n{e}"
+                      for i, (o, e) in enumerate(outs)))
+    report = "\n".join(
+        f"--- proc {i} (rc={p.returncode}) ---\n{o}\n{e}"
+        for i, (p, (o, e)) in enumerate(zip(procs, outs)))
+    assert all(p.returncode == 0 for p in procs), report
+    return [o for o, _ in outs]

@@ -1,0 +1,282 @@
+"""Multi-process sweep fabric: two jax.distributed CPU processes.
+
+Every multi-process scenario spawns two children (4 virtual devices
+each) that join a localhost coordinator via ``tests._child.run_procs``;
+the children compare the collective 2x4-device sweep against the local
+single-device engine bit for bit.  The mesh-construction edge cases run
+in-process or in plain single-process children.
+"""
+import numpy as np
+import pytest
+
+from _child import run_child, run_procs
+
+
+def test_two_process_sweep_bitexact_2d():
+    """2-D slice stacks, divisible (k=8) and ragged (k=5) row counts:
+    the 2x4-process sweep == single-device engine, bit for bit, on both
+    processes (process_allgather returns the full table everywhere)."""
+    outs = run_procs("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.dist import sharding as S, sweep as DS
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        assert jax.process_count() == NPROCS
+        assert len(jax.devices()) == 8 and jax.local_device_count() == 4
+        mesh = M.make_sweep_mesh()
+        s = scientific.field_slices("miranda-vx", count=8, n=96)
+        rng = float(jnp.max(s) - jnp.min(s))
+        ebs = [r * rng for r in (1e-4, 1e-3, 1e-2)]
+        for k in (8, 5):          # 5 does not divide 8: pad on last process
+            ref = np.asarray(P.features_sweep(s[:k], ebs, sharded=False))
+            got = np.asarray(DS.features_sweep_sharded(s[:k], ebs, mesh=mesh))
+            assert got.shape == ref.shape, (got.shape, ref.shape)
+            assert np.array_equal(got, ref), \
+                (k, float(np.abs(got - ref).max()))
+            print("K", k, "BITEXACT", flush=True)
+        # auto-routing: the engine entry point under use_mesh takes the
+        # same multihost path
+        with S.use_mesh(mesh):
+            auto = np.asarray(P.features_sweep(s, ebs))
+        assert np.array_equal(
+            auto, np.asarray(P.features_sweep(s, ebs, sharded=False)))
+        print("AUTO OK", flush=True)
+    """)
+    for out in outs:
+        assert "K 8 BITEXACT" in out and "K 5 BITEXACT" in out
+        assert "AUTO OK" in out
+
+
+def test_two_process_sweep_bitexact_volumes():
+    """Rank-4 volume stacks shard over processes exactly like slices."""
+    outs = run_procs("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.dist import sweep as DS
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        mesh = M.make_sweep_mesh()
+        v = scientific.volume("miranda-vx", shape=(8, 8, 32, 32))
+        ebs = [1e-3, 1e-2]
+        for k in (8, 3):
+            ref = np.asarray(P.features_sweep(v[:k], ebs, sharded=False))
+            got = np.asarray(DS.features_sweep_sharded(v[:k], ebs, mesh=mesh))
+            assert np.array_equal(got, ref), \
+                (k, float(np.abs(got - ref).max()))
+            print("VK", k, "BITEXACT", flush=True)
+    """)
+    for out in outs:
+        assert "VK 8 BITEXACT" in out and "VK 3 BITEXACT" in out
+
+
+def test_process_local_ingestion():
+    """Each process feeds ONLY its process_block rows (scale-out
+    ingestion); the gathered result equals the identical-global-stack
+    contract and the single-device engine."""
+    outs = run_procs("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.dist import sweep as DS
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        mesh = M.make_sweep_mesh()
+        s = np.asarray(scientific.field_slices("scale-u", count=7, n=64))
+        ebs = [1e-3, 1e-2]
+        lo, hi = DS.process_block(len(s), mesh)
+        got = np.asarray(DS.features_sweep_sharded(
+            s[lo:hi], ebs, mesh=mesh, process_local=True, global_k=len(s)))
+        ref = np.asarray(P.features_sweep(jnp.asarray(s), ebs,
+                                          sharded=False))
+        assert np.array_equal(got, ref), float(np.abs(got - ref).max())
+        # wrong row count raises with the expected block in the message
+        try:
+            DS.features_sweep_sharded(s[:1], ebs, mesh=mesh,
+                                      process_local=True, global_k=len(s))
+            assert False, "wrong-sized local block accepted"
+        except ValueError as e:
+            assert "process_block" in str(e)
+            print("BLOCK", lo, hi, "OK", flush=True)
+    """)
+    for out in outs:
+        assert "OK" in out
+
+
+def test_training_crs_reuses_mesh_processes():
+    """training_crs partitions compressor runs over the SAME mesh the
+    sweep used: each process compresses only its block, the all-gathered
+    table matches the full serial loop."""
+    outs = run_procs("""
+        import numpy as np, jax
+        from repro import compressors as C
+        from repro.dist import sweep as DS
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        mesh = M.make_sweep_mesh()
+        s = np.asarray(scientific.field_slices("miranda-vx", count=3, n=64))
+        ebs = [1e-3, 1e-2]
+        comp = C.get("zfp")
+        table = DS.training_crs(comp, s, ebs, mesh=mesh)
+        want = np.asarray([[comp.cr(sl, e) for e in ebs] for sl in s])
+        np.testing.assert_allclose(table, want, rtol=1e-12)
+        print("CRS OK", flush=True)
+    """)
+    for out in outs:
+        assert "CRS OK" in out
+
+
+def test_leader_follower_sweep_service():
+    """Process 0 owns the queue and serves requests; process 1 joins the
+    collective launches via serve().  Results == serial dispatch; the
+    shutdown broadcast releases the follower."""
+    outs = run_procs("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import predictors as P, usecases as UC
+        from repro.launch import mesh as M
+        from repro.data import scientific
+        from repro.serve.sweep_service import ServiceConfig, SweepService
+
+        mesh = M.make_sweep_mesh()
+        s = scientific.field_slices("scale-u", count=10, n=64)
+        rng = float(jnp.max(s) - jnp.min(s))
+        ebs = [1e-4 * rng, 1e-3 * rng, 1e-2 * rng]
+        scfg = ServiceConfig(max_wait_ms=50.0)
+        svc = SweepService(scfg, mesh=mesh)
+        if PID == 0:
+            assert svc.role == "leader", svc.role
+            gm = UC.EbGridModel.train(s[:8], "zfp", ebs)
+            ref_eb = UC.find_error_bound_for_cr(gm, s[9], 6.0)
+            ref_f = np.asarray(P.features_sweep(s[:8], ebs, sharded=False))
+            got_f = svc.featurize(s[:8], ebs)
+            assert np.array_equal(got_f, ref_f), \
+                float(np.abs(got_f - ref_f).max())
+            got_eb = svc.find_eb(gm, s[9], 6.0)
+            assert got_eb == ref_eb, (got_eb, ref_eb)
+            # followers reject submissions; leaders reject foreign cfgs
+            try:
+                svc.submit_featurize(s[:2], ebs,
+                                     P.PredictorConfig(qent_bins=128))
+                assert False, "foreign cfg accepted in multi-process mode"
+            except ValueError as e:
+                assert "multi-process" in str(e)
+            stats = svc.stats()
+            assert stats["launches"] >= 2
+            svc.close()
+            print("LEADER OK", stats["launches"], flush=True)
+        else:
+            assert svc.role == "follower", svc.role
+            try:
+                svc.submit_featurize(s[:2], ebs)
+                assert False, "follower accepted a submission"
+            except RuntimeError as e:
+                assert "follower" in str(e)
+            svc.serve()        # joins every collective until leader close
+            assert svc.launches >= 2
+            print("FOLLOWER OK", svc.launches, flush=True)
+    """)
+    assert "LEADER OK" in outs[0]
+    assert "FOLLOWER OK" in outs[1]
+
+
+def test_uneven_device_shares_across_processes():
+    """A mesh over a PREFIX of the global device list splits unevenly
+    across processes (4 mesh devices on process 0, 2 on process 1 here);
+    per-process ingestion blocks must stay proportional to the devices
+    each process contributes -- and the sweep stays bit-exact, including
+    ragged k, in both ingestion modes."""
+    outs = run_procs("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import predictors as P
+        from repro.dist import sweep as DS
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        mesh = M.make_sweep_mesh(6)       # 4 devices from p0, 2 from p1
+        s = np.asarray(scientific.field_slices("miranda-vx", count=7, n=64))
+        ebs = [1e-3, 1e-2]
+        # k=7 -> k_pad=12, 2 rows/device: p0 ingests [0,7)~8 rows worth,
+        # p1's block is all-pad
+        blocks = {0: (0, 7), 1: (7, 7)}
+        assert DS.process_block(7, mesh) == blocks[PID], \
+            DS.process_block(7, mesh)
+        ref = np.asarray(P.features_sweep(jnp.asarray(s), ebs,
+                                          sharded=False))
+        got = np.asarray(DS.features_sweep_sharded(s, ebs, mesh=mesh))
+        assert np.array_equal(got, ref), float(np.abs(got - ref).max())
+        lo, hi = DS.process_block(len(s), mesh)
+        loc = np.asarray(DS.features_sweep_sharded(
+            s[lo:hi], ebs, mesh=mesh, process_local=True, global_k=len(s)))
+        assert np.array_equal(loc, ref), float(np.abs(loc - ref).max())
+        print("UNEVEN OK", flush=True)
+    """)
+    for out in outs:
+        assert "UNEVEN OK" in out
+
+
+# ------------------------------------------------------------- mesh edges
+
+def test_make_sweep_mesh_single_device():
+    """A 1-device mesh builds fine and the sweep falls back to the local
+    engine (extent 1 -> no sharding)."""
+    import jax
+    from repro.core import predictors as P
+    from repro.dist import sweep as DS
+    from repro.launch import mesh as M
+
+    mesh = M.make_sweep_mesh(1)
+    assert mesh.devices.shape == (1,)
+    assert DS.active_sweep_mesh(mesh) is None       # extent 1: local path
+    x = np.ones((2, 16, 16), np.float32)
+    got = DS.features_sweep_sharded(x, [1e-2], mesh=mesh)
+    ref = P.features_sweep(x, [1e-2], sharded=False)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_make_sweep_mesh_rejects_process_spanning_without_dist():
+    """Asking for more devices than the (never-dist_init'ed) runtime has
+    raises immediately with the dist_init hint -- no hang."""
+    import jax
+    from repro.launch import mesh as M
+
+    n = len(jax.devices())
+    with pytest.raises(ValueError, match="dist_init"):
+        M.make_sweep_mesh(n + 4)
+    with pytest.raises(ValueError):
+        M.make_sweep_mesh(0)
+
+
+def test_make_sweep_mesh_non_power_of_two():
+    """A 6-device (non-power-of-two) mesh shards a ragged k=7 sweep
+    correctly (pad to 12, drop)."""
+    out = run_child("""
+        import numpy as np, jax
+        from repro.core import predictors as P
+        from repro.dist import sweep as DS
+        from repro.launch import mesh as M
+        from repro.data import scientific
+
+        assert len(jax.devices()) == 6
+        mesh = M.make_sweep_mesh()
+        assert mesh.devices.shape == (6,)
+        s = scientific.field_slices("cesm-cloud", count=7, n=64)
+        ref = np.asarray(P.features_sweep(s, [1e-3, 1e-2], sharded=False))
+        got = np.asarray(DS.features_sweep_sharded(s, [1e-3, 1e-2],
+                                                   mesh=mesh))
+        assert np.array_equal(got, ref), float(np.abs(got - ref).max())
+        print("NP2 OK", flush=True)
+    """, devices=6)
+    assert "NP2 OK" in out
+
+
+def test_process_block_single_process_mesh_raises_cleanly():
+    """process_local on a one-process mesh is rejected with a clear
+    error (instead of wedging a half-joined collective)."""
+    from repro.dist import sweep as DS
+
+    x = np.ones((4, 16, 16), np.float32)
+    with pytest.raises(ValueError, match="process-spanning"):
+        DS.features_sweep_sharded(x, [1e-2], process_local=True, global_k=4)

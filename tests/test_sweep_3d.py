@@ -208,7 +208,11 @@ def test_sweep_service_volume_requests_bit_equal(vols, eb_grid):
     test = scientific.volume("qmcpack", shape=(8, 32, 48), seed=9)
     ref_feats = np.asarray(P.features_sweep(vols, jnp.asarray(eb_grid)))
     ref_eb = UC.find_error_bound_for_cr(gm, test, target_cr=2.0)
-    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+    # first-touch admission: this test exercises volume coalescing and
+    # cache reuse, not the default second-sighting admission policy
+    # (which has its own transitions test in test_sweep_service.py)
+    with SweepService(ServiceConfig(max_wait_ms=5.0,
+                                    cache_admit_after=1)) as svc:
         # mixed ranks coalesce: one volume stack + one 2-D slice request
         f_vol = svc.submit_featurize(vols, eb_grid)
         f_2d = svc.submit_featurize(np.asarray(vols[:2, 0]), eb_grid)

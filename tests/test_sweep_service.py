@@ -94,21 +94,62 @@ def test_concurrent_clients_bitequal(setup):
     assert results == serial
 
 
-def test_cache_hit_second_uc1_zero_launches(setup):
+def test_cache_admission_transitions(setup):
+    """Default policy: a digest is admitted on its SECOND sighting, so a
+    one-shot cold field never occupies the cache, a once-repeated field
+    pays one extra launch, and from the third request on it is served
+    with zero launches."""
     slices, ebs, gm, eps, models = setup
     test = slices[11]
     with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
-        first = svc.find_eb(gm, test, 6.0)
+        first = svc.find_eb(gm, test, 6.0)              # sighting 1: cold
         launches = svc.launches
         assert launches >= 1
-        second = svc.find_eb(gm, test, 6.0)
-        # the whole grid came from the cross-request cache: ZERO launches
-        assert svc.launches == launches
+        assert svc.stats()["cache"]["entries"] == 0     # one-shot: not cached
+        assert svc.stats()["cache"]["admissions_denied"] >= 1
+        second = svc.find_eb(gm, test, 6.0)             # sighting 2: admits
+        assert svc.launches == launches + 1
         assert second == first
+        assert svc.stats()["cache"]["entries"] == 1
+        third = svc.find_eb(gm, test, 6.0)              # hot: pure cache
+        assert svc.launches == launches + 1
+        assert third == first
         # UC2 at a grid eb on the same field also rides the cache
         svc.best_compressor(models, test, eps)
-        assert svc.launches == launches
+        assert svc.launches == launches + 1
         assert svc.stats()["cache"]["hits"] >= len(ebs) + 1
+
+
+def test_cache_admit_first_touch_config(setup):
+    """cache_admit_after=1 restores first-touch caching: the second
+    request on a field is already launch-free."""
+    slices, ebs, gm, eps, models = setup
+    test = slices[11]
+    scfg = ServiceConfig(max_wait_ms=5.0, cache_admit_after=1)
+    with SweepService(scfg) as svc:
+        first = svc.find_eb(gm, test, 6.0)
+        launches = svc.launches
+        second = svc.find_eb(gm, test, 6.0)
+        assert svc.launches == launches
+        assert second == first
+
+
+def test_cache_concurrent_requests_admit_in_one_batch(setup):
+    """In-batch sightings count: a field arriving with simultaneous
+    requests is admitted on its very first (deduplicated) launch."""
+    slices, ebs, gm, eps, models = setup
+    test = slices[12]
+    with SweepService(ServiceConfig(max_wait_ms=200.0,
+                                    max_batch_slices=64)) as svc:
+        f1 = svc.submit_find_eb(gm, test, 6.0)
+        f2 = svc.submit_best_compressor(models, test, eps)
+        f1.result(timeout=120), f2.result(timeout=120)
+        stats = svc.stats()
+        assert stats["launches"] == 1                   # deduped
+        assert stats["cache"]["entries"] == 1           # ... and admitted
+        # third request is served from the cache, zero launches
+        svc.find_eb(gm, test, 6.0)
+        assert svc.launches == 1
 
 
 def test_dedup_within_batch(setup):
@@ -146,6 +187,34 @@ def test_submit_after_close_raises(setup):
     svc.close()
     with pytest.raises(RuntimeError):
         svc.submit_featurize(slices[11:12], [ebs[0]])
+
+
+def test_feature_cache_admission_policy_unit():
+    """FeatureCache-level admission: puts are denied until the digest has
+    admit_after sightings; sighting bookkeeping is bounded and cleared on
+    admission."""
+    row = np.zeros(2, np.float32)
+    cache = FeatureCache(max_bytes=1 << 20, admit_after=2)
+    key = ("cold", None)
+    assert cache.record_sighting(key) == 1
+    assert cache.put(key, 1.0, row) is False            # under-sighted
+    assert cache.get(key, 1.0) is None
+    assert cache.stats()["admissions_denied"] == 1
+    assert cache.record_sighting(key) == 2
+    assert cache.put(key, 1.0, row) is True             # second sighting
+    assert cache.get(key, 1.0) is not None
+    assert cache.stats()["pending_sightings"] == 0      # cleared on admit
+    # admitted digests keep accepting new eps rows without re-sighting
+    assert cache.put(key, 2.0, row) is True
+    # in-batch multi-request sighting (n=2) admits immediately
+    key2 = ("hot", None)
+    assert cache.record_sighting(key2, n=2) == 2
+    assert cache.put(key2, 1.0, row) is True
+    # the sighting ring is bounded: old cold digests fall off
+    small = FeatureCache(max_bytes=1 << 20, admit_after=2, seen_capacity=2)
+    for i in range(5):
+        small.record_sighting((f"d{i}", None))
+    assert small.stats()["pending_sightings"] == 2
 
 
 def test_feature_cache_lru_eviction():
@@ -262,6 +331,7 @@ def test_cached_rows_are_owned_copies(setup):
     slices, ebs, gm, eps, models = setup
     with SweepService(ServiceConfig(max_wait_ms=1.0)) as svc:
         svc.featurize(slices[10:11], ebs)
+        svc.featurize(slices[10:11], ebs)     # second sighting -> admitted
         [entry] = list(svc.cache._entries.values())
         for row in entry.values():
             assert row.base is None

@@ -1,0 +1,26 @@
+"""Extract the README quickstart snippet(s), verbatim, for CI execution.
+
+Prints every fenced ```python block of README.md concatenated in order
+(the quickstart plus the mesh follow-on, which shares its variables), so
+the docs-smoke job runs exactly what the README shows:
+
+    python tools/extract_quickstart.py > /tmp/quickstart.py
+    PYTHONPATH=src python /tmp/quickstart.py
+"""
+import os
+import re
+import sys
+
+README = os.path.join(os.path.dirname(__file__), "..", "README.md")
+
+
+def extract(text: str) -> str:
+    blocks = re.findall(r"```python\n(.*?)```", text, flags=re.DOTALL)
+    if not blocks:
+        raise SystemExit("README.md has no ```python blocks")
+    return "\n\n".join(blocks)
+
+
+if __name__ == "__main__":
+    with open(sys.argv[1] if len(sys.argv) > 1 else README) as f:
+        sys.stdout.write(extract(f.read()))
