@@ -1,0 +1,210 @@
+"""Elastic fault-recovery gate for the sweep service (ISSUE 6
+acceptance).
+
+A reference child computes every request's feature tensor with the
+plain unsharded sweep.  Then a 2-process ``jax.distributed`` fabric
+runs the same requests through :class:`repro.serve.sweep_service
+.SweepService` -- with the follower armed (via
+``repro.dist.faultinject``) to SIGKILL itself on its second collective
+launch.  The leader must detect the loss, shrink the fabric, requeue
+the in-flight batch, and complete every future on the survivor; the
+parent asserts every recovered tensor is BIT-EXACT against the
+reference, that exactly the armed child died, that the service
+recorded the recovery (``recoveries >= 1``, epoch advanced, KV
+transport, survivor-only process set), and that the faulted batch
+finished well inside the recovery bound (no reliance on the harness
+reaping hung children).
+
+Virtual CPU devices share the same cores, so the timings record fault
+*detection + relaunch* overhead rather than hardware speedups.  Writes
+``results/BENCH_fault.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+NPROCS = 2
+DEVICES_EACH = 2
+FAULT_PID = 1
+FAULT_NTH = 2                  # die on launch 2: launch 1 warms/compiles
+LAUNCH_TIMEOUT_S = 60.0        # must cover the warm launch's compile
+EB = (1e-3, 1e-2, 1e-1)
+
+
+def _payloads():
+    """Deterministic request payloads shared by every child."""
+    rng = np.random.default_rng(7)
+    base = rng.standard_normal((8, 32, 32)).astype(np.float32)
+    eps = np.asarray(EB, np.float32)
+    reqs = [("warm", base[:4])]
+    reqs += [(f"inflight{i}", base[2 * i:2 * i + 2] + np.float32(i))
+             for i in range(4)]
+    reqs.append(("post", base[4:] * np.float32(0.5)))
+    return reqs, eps
+
+
+def _child_ref(out_prefix: str) -> None:
+    from repro.core import predictors as PRED
+
+    reqs, eps = _payloads()
+    times = {}
+    for name, stack in reqs:
+        t0 = time.perf_counter()
+        out = np.asarray(PRED.features_sweep(stack, eps, sharded=False))
+        times[name] = time.perf_counter() - t0
+        np.save(f"{out_prefix}.{name}.npy", out)
+    with open(out_prefix + ".json", "w") as f:
+        json.dump({"times_s": times}, f)
+
+
+def _child_svc(pid: int, port: int, out_prefix: str) -> None:
+    from repro.launch import mesh as M
+    M.dist_init(f"127.0.0.1:{port}", num_processes=NPROCS, process_id=pid)
+
+    from repro.dist import faultinject as FI
+    from repro.serve.sweep_service import ServiceConfig, SweepService
+
+    if pid == FAULT_PID:
+        FI.configure(f"follower_launch:kill:{FAULT_NTH}")
+
+    mesh = M.make_sweep_mesh()
+    scfg = ServiceConfig(launch_timeout_s=LAUNCH_TIMEOUT_S,
+                         heartbeat_s=0.25, max_wait_ms=20.0)
+    svc = SweepService(scfg, mesh=mesh)
+    reqs, eps = _payloads()
+    by_name = dict(reqs)
+
+    if pid == 0:
+        outs, times = {}, {}
+        # launch 1: full 2-process fabric (includes executable compile)
+        t0 = time.perf_counter()
+        outs["warm"] = np.asarray(
+            svc.submit_featurize(by_name["warm"], eps).result(240))
+        times["warm_s"] = time.perf_counter() - t0
+        # launch 2 kills the follower mid-collective; every one of these
+        # in-flight futures must still complete on the shrunken fabric
+        inflight = [(n, s) for n, s in reqs if n.startswith("inflight")]
+        t0 = time.perf_counter()
+        futs = [(n, svc.submit_featurize(s, eps)) for n, s in inflight]
+        for n, f in futs:
+            outs[n] = np.asarray(f.result(240))
+        times["faulted_batch_s"] = time.perf_counter() - t0
+        # steady state on the recovered (survivor-only, KV) fabric
+        t0 = time.perf_counter()
+        outs["post"] = np.asarray(
+            svc.submit_featurize(by_name["post"], eps).result(240))
+        times["post_recovery_s"] = time.perf_counter() - t0
+        st = svc.stats()
+        svc.close()
+        for name, out in outs.items():
+            np.save(f"{out_prefix}.{name}.npy", out)
+        with open(out_prefix + ".json", "w") as f:
+            json.dump({"times_s": times, "recoveries": st["recoveries"],
+                       "epoch": st["epoch"], "transport": st["transport"],
+                       "procs": st["procs"]}, f)
+    else:
+        try:
+            svc.serve()        # SIGKILLed mid-launch by the injection
+        except Exception:
+            pass
+        svc.close()
+    # skip the jax.distributed atexit shutdown: its barrier would abort
+    # against the already-dead peer
+    sys.stdout.flush()
+    os._exit(0)
+
+
+def main() -> dict:
+    from benchmarks import common
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ref = os.path.join(tmp, "ref")
+        svc = os.path.join(tmp, "svc")
+        common.run_child_module(
+            "benchmarks.bench_fault", ["--child-ref", ref], 1)
+        port = common.free_port()
+        procs = [common.spawn_child_module(
+                     "benchmarks.bench_fault",
+                     ["--child-svc", pid, port, svc], DEVICES_EACH)
+                 for pid in range(NPROCS)]
+        try:
+            texts = [p.communicate(timeout=560) for p in procs]
+        except subprocess.TimeoutExpired:
+            for p in procs:
+                p.kill()
+            texts = [p.communicate() for p in procs]
+            raise AssertionError(
+                "fault-recovery children hung (recovery never finished?):"
+                "\n" + "\n".join(o + "\n" + e for o, e in texts))
+        # exactly the armed follower dies; the leader must exit clean
+        assert procs[0].returncode == 0, (
+            f"leader rc={procs[0].returncode}\n"
+            f"{texts[0][0]}\n{texts[0][1]}")
+        assert procs[FAULT_PID].returncode != 0, \
+            "injected follower survived its own SIGKILL"
+
+        with open(ref + ".json") as f:
+            meta_ref = json.load(f)
+        with open(svc + ".json") as f:
+            meta = json.load(f)
+
+        reqs, _ = _payloads()
+        out = {"processes": NPROCS, "devices_each": DEVICES_EACH,
+               "fault": f"follower_launch:kill:{FAULT_NTH} on pid "
+                        f"{FAULT_PID}",
+               "recoveries": meta["recoveries"], "epoch": meta["epoch"],
+               "transport": meta["transport"], "procs": meta["procs"],
+               "times_s": meta["times_s"], "cases": {}}
+        for name, _stack in reqs:
+            a = np.load(f"{ref}.{name}.npy")
+            b = np.load(f"{svc}.{name}.npy")
+            bitexact = bool(np.array_equal(a, b))
+            out["cases"][name] = {
+                "k": int(a.shape[0]), "bitexact": bitexact,
+                "max_abs_diff": float(np.abs(a - b).max()),
+            }
+            assert bitexact, (
+                f"{name}: recovered sweep diverged "
+                f"(maxdiff {out['cases'][name]['max_abs_diff']})")
+
+        # acceptance: the fault was survived, attributed, and bounded
+        assert meta["recoveries"] >= 1, meta
+        assert meta["epoch"] >= 1 and meta["transport"] == "kv", meta
+        assert meta["procs"] == [0], meta
+        assert meta["times_s"]["faulted_batch_s"] < 3 * LAUNCH_TIMEOUT_S, \
+            meta["times_s"]
+        common.emit(
+            "fault/warm_launch", meta["times_s"]["warm_s"] * 1e6,
+            f"procs={NPROCS} ref_s={meta_ref['times_s']['warm']:.2f}")
+        common.emit(
+            "fault/faulted_batch",
+            meta["times_s"]["faulted_batch_s"] * 1e6,
+            f"requests=4 recoveries={meta['recoveries']} "
+            f"transport={meta['transport']} bitexact=True")
+        common.emit(
+            "fault/post_recovery",
+            meta["times_s"]["post_recovery_s"] * 1e6,
+            f"procs={meta['procs']} epoch={meta['epoch']}")
+    common.save_json("BENCH_fault", out)
+    return out
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--child-ref":
+        _child_ref(sys.argv[2])
+    elif len(sys.argv) > 1 and sys.argv[1] == "--child-svc":
+        _child_svc(int(sys.argv[2]), int(sys.argv[3]), sys.argv[4])
+    else:
+        res = main()
+        print("PASS: follower loss survived, in-flight batch recovered "
+              "bit-exact;", json.dumps(
+                  {k: res[k] for k in
+                   ("recoveries", "epoch", "transport", "times_s")},
+                  indent=1))

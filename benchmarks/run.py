@@ -22,6 +22,7 @@ SUITES = [
     ("fig10_usecases", "benchmarks.bench_usecases"),
     ("serve_coalescing", "benchmarks.bench_serve"),
     ("multihost_fabric", "benchmarks.bench_multihost"),
+    ("fault_recovery", "benchmarks.bench_fault"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -1,12 +1,32 @@
-"""Elastic re-meshing: move a (possibly sharded) state tree onto a new
-mesh, e.g. after shrinking an axis when a slice of devices is lost.
+"""Elastic fault tolerance for the multi-process sweep fabric.
 
-``remesh_state`` is layout-preserving in value: every leaf is device_put
-onto the sharding its logical axes imply on the target mesh (gathering /
-re-slicing as needed).  ``shrink_mesh`` drops trailing device slices along
-one mesh axis.
+Two layers live here:
+
+1. **Re-meshing** -- ``remesh_state`` moves a (possibly sharded) state
+   tree onto a new mesh, e.g. after shrinking an axis when a slice of
+   devices is lost; ``shrink_mesh`` drops trailing device slices along
+   one mesh axis; ``surviving_submesh`` rebuilds a 1-D sweep mesh over
+   the devices of the processes that are still alive.
+
+2. **Failure detection plumbing** for the serving fabric
+   (``repro.serve.sweep_service``): a typed :class:`FabricError`, a
+   :class:`Heartbeat` publisher + :class:`PeerMonitor` staleness
+   tracker over the jax coordination-service key-value store, a
+   barrier-with-timeout (:func:`fabric_barrier`), and chunked KV
+   payload helpers (:func:`kv_put_bytes` / :func:`kv_get_bytes`) the
+   post-recovery launch transport uses.
+
+The KV store is served by the ``jax.distributed`` coordinator, so it
+keeps working among the *surviving* processes after a peer dies as long
+as the coordinator process itself is alive (for leader-death tolerance
+run the coordinator out-of-process: ``launch.mesh.serve_coordinator`` +
+``dist_init(external_coordinator=True)``).
 """
 from __future__ import annotations
+
+import threading
+import time
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 import jax
@@ -15,11 +35,253 @@ from jax.sharding import Mesh
 from repro.dist import sharding as S
 
 
+class FabricError(RuntimeError):
+    """A failure of the multi-process fabric itself (vs one request).
+
+    ``kind`` classifies the fault:
+
+    * ``"follower_lost"`` -- one or more followers died or wedged; the
+      leader shrinks the mesh and retries (``retriable=True``).
+    * ``"leader_lost"``   -- the leader stopped heartbeating; followers
+      cannot continue (restart the fabric to recover).
+    * ``"evicted"``       -- this (live) process was dropped from the
+      recovered fabric; restart it to rejoin.
+    * ``"timeout"``       -- a bounded collective/recovery wait expired
+      without an identifiable peer fault.
+    * ``"failed"``        -- recovery itself is impossible (e.g. the
+      coordination service is unreachable).
+
+    ``lost`` names the process indices believed dead/wedged (may be
+    empty when the fault could not be attributed).  ``retriable`` tells
+    the leader's launch loop whether shrinking the mesh and relaunching
+    can succeed; non-retriable errors propagate to every pending future
+    with restart guidance in the message.
+    """
+
+    def __init__(self, message: str, *, kind: str = "failed",
+                 lost: Sequence[int] = (), retriable: bool = False):
+        self.kind = kind
+        self.lost = tuple(lost)
+        self.retriable = retriable
+        detail = f" [kind={kind}"
+        if self.lost:
+            detail += f", lost processes={list(self.lost)}"
+        detail += ", retriable]" if retriable else \
+            "; restart the affected process(es) to rejoin the fabric]"
+        super().__init__(message + detail)
+
+
+# ---------------------------------------------------------------------------
+# Coordination-service key-value helpers
+# ---------------------------------------------------------------------------
+
+KV_CHUNK = 1 << 20               # chunk large payloads (1 MiB per KV value)
+
+
+def kv_client():
+    """The jax coordination-service client, or None outside a
+    ``jax.distributed`` runtime."""
+    try:
+        from jax._src import distributed as _dist
+        return _dist.global_state.client
+    except Exception:
+        return None
+
+
+def kv_set(client, key: str, value: str) -> bool:
+    """Best-effort overwrite-set; False when the store is unreachable."""
+    try:
+        client.key_value_set(key, value, allow_overwrite=True)
+        return True
+    except Exception:
+        return False
+
+
+def kv_get(client, key: str, timeout_ms: int) -> Optional[str]:
+    """Blocking get; None when the key never appears within the timeout
+    (the coordination service raises DEADLINE_EXCEEDED on missing keys)."""
+    try:
+        return client.blocking_key_value_get(key, int(timeout_ms))
+    except Exception:
+        return None
+
+
+def kv_dir(client, prefix: str) -> dict:
+    """{key: value} under ``prefix`` (empty on any store error)."""
+    try:
+        return dict(client.key_value_dir_get(prefix))
+    except Exception:
+        return {}
+
+
+def kv_delete(client, key: str) -> None:
+    try:
+        client.key_value_delete(key)
+    except Exception:
+        pass
+
+
+def kv_put_bytes(client, key: str, data: bytes) -> None:
+    """Store ``data`` chunked under ``key`` (``key/n`` + ``key/<i>``)."""
+    n = max(1, -(-len(data) // KV_CHUNK))
+    for i in range(n):
+        client.key_value_set_bytes(
+            f"{key}/{i}", data[i * KV_CHUNK:(i + 1) * KV_CHUNK],
+            allow_overwrite=True)
+    client.key_value_set(f"{key}/n", str(n), allow_overwrite=True)
+
+
+def kv_get_bytes(client, key: str, timeout_ms: int) -> Optional[bytes]:
+    """Read a :func:`kv_put_bytes` payload; None on timeout."""
+    n = kv_get(client, f"{key}/n", timeout_ms)
+    if n is None:
+        return None
+    try:
+        parts = [client.blocking_key_value_get_bytes(
+            f"{key}/{i}", int(timeout_ms)) for i in range(int(n))]
+    except Exception:
+        return None
+    return b"".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats + peer staleness
+# ---------------------------------------------------------------------------
+
+class Heartbeat:
+    """Publishes a monotonically increasing counter to
+    ``{prefix}/hb/{pid}`` every ``interval_s`` from a daemon thread.
+
+    A peer's counter freezing is the liveness signal
+    (:class:`PeerMonitor`): value-change tracking is clock-skew free,
+    unlike publishing wall-clock timestamps.
+    """
+
+    def __init__(self, client, prefix: str, pid: int,
+                 interval_s: float = 0.5):
+        self._client = client
+        self._key = f"{prefix}/hb/{pid}"
+        self._interval = max(0.05, float(interval_s))
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> "Heartbeat":
+        if self._client is None or self._thread is not None:
+            return self
+        self._thread = threading.Thread(
+            target=self._run, name="fabric-heartbeat", daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        beat, misses = 0, 0
+        while not self._stop.is_set():
+            beat += 1
+            if kv_set(self._client, self._key, str(beat)):
+                misses = 0
+            else:
+                # a transient RPC failure must not silence the publisher
+                # forever (observers would declare this process dead);
+                # only a persistently unreachable store ends the thread
+                misses += 1
+                if misses >= 10:
+                    return
+            self._stop.wait(self._interval)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class PeerMonitor:
+    """Observer-side staleness tracking over the heartbeat keys.
+
+    ``poll()`` snapshots ``{prefix}/hb/``; a peer is *stale* once its
+    counter has been observed unchanged for ``stale_after`` seconds
+    (never-published peers age from their first poll).  All ages are
+    relative to this monitor's own observations, so detecting a fresh
+    death takes one ``stale_after`` observation window.
+    """
+
+    def __init__(self, client, prefix: str):
+        self._client = client
+        self._prefix = f"{prefix}/hb/"
+        self._state: dict = {}       # pid -> (last value, t_last_change)
+
+    def poll(self) -> None:
+        now = time.monotonic()
+        seen = kv_dir(self._client, self._prefix)
+        vals = {}
+        for key, val in seen.items():
+            try:
+                vals[int(key.rsplit("/", 1)[-1])] = val
+            except ValueError:
+                continue
+        for pid, val in vals.items():
+            prev = self._state.get(pid)
+            if prev is None or prev[0] != val:
+                self._state[pid] = (val, now)
+
+    def track(self, pids: Iterable[int]) -> None:
+        """Start aging ``pids`` even if they never published a beat."""
+        now = time.monotonic()
+        for pid in pids:
+            self._state.setdefault(pid, (None, now))
+
+    def seen(self, pid: int) -> bool:
+        """True once ``pid`` has published at least one beat."""
+        ent = self._state.get(pid)
+        return ent is not None and ent[0] is not None
+
+    def age(self, pid: int) -> float:
+        ent = self._state.get(pid)
+        if ent is None:
+            self.track([pid])
+            return 0.0
+        return time.monotonic() - ent[1]
+
+    def stale(self, pids: Iterable[int], stale_after: float) -> list:
+        return [p for p in pids if self.age(p) > stale_after]
+
+    def observe_stale(self, pids: Sequence[int], stale_after: float,
+                      poll_s: float = 0.1) -> list:
+        """Watch ``pids`` for one full ``stale_after`` window and return
+        the ones whose heartbeat never advanced (the dead/wedged set).
+        Blocking for ~``stale_after`` seconds; used right after a
+        collective fault to attribute it."""
+        self.track(pids)
+        self.poll()
+        deadline = time.monotonic() + stale_after + poll_s
+        while time.monotonic() < deadline:
+            time.sleep(poll_s)
+            self.poll()
+        return self.stale(pids, stale_after * 0.9)
+
+
+def fabric_barrier(client, name: str, timeout_s: float,
+                   procs: Sequence[int]) -> bool:
+    """Barrier among ``procs`` only (survivors), bounded by
+    ``timeout_s``; False on timeout / store error instead of raising so
+    recovery loops can shrink the set and retry."""
+    try:
+        client.wait_at_barrier(name, int(timeout_s * 1000),
+                               process_ids=list(procs))
+        return True
+    except Exception:
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Re-meshing
+# ---------------------------------------------------------------------------
+
 def remesh_state(tree, axes, mesh: Mesh):
     """Place every leaf of ``tree`` on ``mesh`` per its logical ``axes``.
 
     ``axes`` mirrors ``tree``'s structure with a tuple of logical axis
     names where ``tree`` has an array (``params.logical_axes`` output).
+    Layout-preserving in value: every leaf is device_put onto the
+    sharding its logical axes imply on the target mesh (gathering /
+    re-slicing as needed).
     """
     def place(a, ax):
         return jax.device_put(a, S.named_sharding(a.shape, ax, mesh))
@@ -28,7 +290,30 @@ def remesh_state(tree, axes, mesh: Mesh):
 
 def shrink_mesh(mesh: Mesh, axis: str, new_size: int) -> Mesh:
     """A mesh with ``axis`` reduced to its first ``new_size`` slices."""
+    if axis not in mesh.axis_names:
+        raise ValueError(
+            f"shrink_mesh: mesh has axes {mesh.axis_names}, not {axis!r}")
     i = mesh.axis_names.index(axis)
-    assert 1 <= new_size <= mesh.devices.shape[i], (axis, new_size)
-    devs = np.take(mesh.devices, np.arange(new_size), axis=i)
+    if not 1 <= int(new_size) <= mesh.devices.shape[i]:
+        raise ValueError(
+            f"shrink_mesh: new_size={new_size} outside [1, "
+            f"{mesh.devices.shape[i]}] for axis {axis!r}")
+    devs = np.take(mesh.devices, np.arange(int(new_size)), axis=i)
     return Mesh(devs, mesh.axis_names)
+
+
+def surviving_submesh(mesh: Mesh, alive: Iterable[int]) -> Mesh:
+    """A 1-D sweep mesh over ``mesh``'s devices owned by the ``alive``
+    processes, in original mesh order (keeps per-process device blocks
+    contiguous, which ``dist.sweep`` requires)."""
+    if len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"surviving_submesh supports 1-D sweep meshes, got axes "
+            f"{mesh.axis_names}")
+    alive = set(alive)
+    devs = [d for d in mesh.devices.flat if d.process_index in alive]
+    if not devs:
+        raise ValueError(
+            f"surviving_submesh: no devices left for processes "
+            f"{sorted(alive)}")
+    return Mesh(np.asarray(devs, object), mesh.axis_names)

@@ -179,12 +179,46 @@ def gather_rows(out) -> np.ndarray:
     Fully-addressable arrays transfer directly; global arrays with
     non-addressable shards are collectively all-gathered first (every
     participating process must call this -- it is the sweep fabric's one
-    synchronization point).
+    synchronization point).  The all-gather is RUNTIME-global
+    (``multihost_utils.process_allgather``), so it requires every
+    process of the ``jax.distributed`` runtime to be alive; on a
+    recovered fabric whose mesh no longer spans every runtime process
+    use :func:`replicate_rows` instead.
     """
     if isinstance(out, jax.Array) and not out.is_fully_addressable:
         from jax.experimental import multihost_utils
         return np.asarray(multihost_utils.process_allgather(out, tiled=True))
     return np.asarray(out)
+
+
+def replicate_rows(out, mesh: Mesh) -> np.ndarray:
+    """MESH-scoped gather: replicate ``out`` across ``mesh`` and read
+    the local copy.
+
+    Equivalent in value to :func:`gather_rows` but the collective is
+    scoped to ``mesh``'s processes only (a jitted identity with
+    replicated out_shardings), so it works on a shrunken survivor
+    submesh while dead runtime peers would wedge/abort the
+    runtime-global ``process_allgather``.  Every process owning devices
+    in ``mesh`` must make this call.
+    """
+    if not isinstance(out, jax.Array) or out.is_fully_addressable:
+        return np.asarray(out)
+    sh = NamedSharding(mesh, P(*([None] * out.ndim)))
+    rep = jax.jit(lambda a: a, out_shardings=sh)(out)
+    return np.asarray(rep.addressable_shards[0].data)
+
+
+def invalidate_mesh_caches() -> None:
+    """Drop every cached sharded-sweep executable.
+
+    Called after elastic recovery rebuilds the mesh: executables
+    compiled for the OLD mesh are keyed by it and would never be hit
+    again, but they pin compiled programs (and device references) that
+    include lost processes -- clear the lot so the shrunken fabric
+    recompiles only what it uses.
+    """
+    _sharded_sweep_fn.cache_clear()
 
 
 def _global_stack(local: np.ndarray, global_shape: tuple, mesh: Mesh,

@@ -6,6 +6,8 @@ slice); multi-pod: (pod=2, data=16, model=16) = 512 chips.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 
 
@@ -19,10 +21,37 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def _probe_coordinator_port(address: str, attempts: int = 10,
+                            wait_s: float = 0.3) -> None:
+    """Pre-flight the coordinator bind: the embedded coordination
+    service CHECK-aborts the whole process (uncatchable) when its port
+    is taken, so probe with a plain socket first and retry a bounded
+    number of times (a just-released port clears TIME_WAIT quickly).
+    Raises a *catchable* RuntimeError when the port stays busy, which
+    harnesses translate into a relaunch on a fresh port."""
+    import socket
+    host, _, port = address.rpartition(":")
+    last = None
+    for _ in range(max(1, attempts)):
+        try:
+            with socket.socket() as s:
+                s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+                s.bind((host or "127.0.0.1", int(port)))
+            return
+        except OSError as e:
+            last = e
+            time.sleep(wait_s)
+    raise RuntimeError(
+        f"coordinator port {address} is already in use "
+        f"(after {attempts} probes): {last}")
+
+
 def dist_init(coordinator_address: str | None = None, *,
               num_processes: int | None = None,
               process_id: int | None = None,
-              cpu_collectives: str = "gloo") -> tuple[int, int]:
+              cpu_collectives: str = "gloo",
+              external_coordinator: bool = False,
+              init_timeout_s: float = 60.0) -> tuple[int, int]:
     """Join the multi-process sweep fabric: ``jax.distributed`` init.
 
     Call ONCE per process, before any other jax use, on every process
@@ -35,6 +64,15 @@ def dist_init(coordinator_address: str | None = None, *,
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (exported
     before jax is imported) for N virtual devices per process.
 
+    Process 0 normally EMBEDS the coordination service; if that process
+    dies, every other process's coordination client hard-aborts, so a
+    follower can never outlive its leader.  For leader-death tolerance
+    pass ``external_coordinator=True`` on every process (including
+    process 0) and host the service elsewhere with
+    :func:`serve_coordinator` -- the processes then build plain
+    coordination clients against it, and losing any *worker* process
+    (leader included) leaves the others functional.
+
     Returns ``(process_index, process_count)``.
     """
     try:
@@ -42,6 +80,27 @@ def dist_init(coordinator_address: str | None = None, *,
                           cpu_collectives)
     except Exception:
         pass                 # older jax: CPU collectives not configurable
+    if external_coordinator:
+        if (coordinator_address is None or num_processes is None or
+                process_id is None):
+            raise ValueError(
+                "external_coordinator=True needs explicit "
+                "coordinator_address, num_processes and process_id")
+        from jax._src import distributed as _dist
+        from jaxlib import xla_extension as _xe
+        client = _xe.get_distributed_runtime_client(
+            coordinator_address, process_id,
+            init_timeout=max(1, int(init_timeout_s)), use_compression=True)
+        client.connect()
+        gs = _dist.global_state
+        gs.client = client
+        gs.process_id = process_id
+        gs.num_processes = num_processes
+        gs.coordinator_address = coordinator_address
+        return jax.process_index(), jax.process_count()
+    if coordinator_address is not None and process_id == 0:
+        # only the coordinator-hosting process races for the bind
+        _probe_coordinator_port(coordinator_address)
     kw = {}
     if coordinator_address is not None:
         kw["coordinator_address"] = coordinator_address
@@ -51,6 +110,34 @@ def dist_init(coordinator_address: str | None = None, *,
         kw["process_id"] = process_id
     jax.distributed.initialize(**kw)
     return jax.process_index(), jax.process_count()
+
+
+def serve_coordinator(address: str, num_processes: int,
+                      block: bool = True):
+    """Host a standalone ``jax.distributed`` coordination service.
+
+    Run this in its OWN process (it should never be a fabric worker:
+    the point is that worker deaths -- the leader's included -- leave
+    the coordination service up for the survivors' KV store, barriers
+    and fault detection).  Workers join with
+    ``dist_init(address, ..., external_coordinator=True)``.
+
+    ``block=True`` serves until the process is killed; ``block=False``
+    returns the service handle (caller keeps it alive).
+    """
+    from jaxlib import xla_extension as _xe
+    _probe_coordinator_port(address)
+    host, _, port = address.rpartition(":")
+    service = _xe.get_distributed_runtime_service(
+        f"[::]:{port}", int(num_processes))
+    if not block:
+        return service
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    return service
 
 
 def make_sweep_mesh(num_devices: int | None = None):

@@ -18,6 +18,22 @@ followers)::
     XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
     python -m repro.launch.sweep_serve --mesh auto \\
         --coordinator 127.0.0.1:7654 --num-processes 2 --process-id 1
+
+For leader-death tolerance, host the coordination service in its own
+process (``--coordinator-only``) and join every worker with
+``--external-coordinator``::
+
+    python -m repro.launch.sweep_serve --coordinator 127.0.0.1:7654 \\
+        --num-processes 2 --coordinator-only &
+    ... --coordinator 127.0.0.1:7654 --num-processes 2 --process-id 0 \\
+        --external-coordinator ...
+
+``--launch-timeout-s`` bounds each collective launch on the leader
+(size it to cover a first launch's executable compile);
+``--queue-rows`` enables bounded-queue admission control (overload
+rejects with ``RetryAfter`` instead of queueing without limit);
+``--chaos SPEC`` arms ``repro.dist.faultinject`` on this process for
+recovery drills (e.g. ``--chaos follower_launch:kill:2``).
 """
 from __future__ import annotations
 
@@ -59,14 +75,47 @@ def main():
                          "jax.distributed multi-process fabric")
     ap.add_argument("--num-processes", type=int, default=None)
     ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--external-coordinator", action="store_true",
+                    help="the coordination service runs out-of-process "
+                         "(see --coordinator-only); workers survive "
+                         "leader death")
+    ap.add_argument("--coordinator-only", action="store_true",
+                    help="host the standalone coordination service at "
+                         "--coordinator and exit on SIGINT (not a "
+                         "fabric worker)")
+    ap.add_argument("--launch-timeout-s", type=float, default=60.0,
+                    help="leader's bound per collective launch; must "
+                         "cover a first launch's executable compile")
+    ap.add_argument("--heartbeat-s", type=float, default=0.5,
+                    help="fabric liveness publish interval")
+    ap.add_argument("--queue-rows", type=int, default=0,
+                    help="bounded-queue admission control: reject with "
+                         "RetryAfter beyond this many queued rows "
+                         "(0 = unbounded)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="arm repro.dist.faultinject on this process, "
+                         "e.g. follower_launch:kill:2")
     args = ap.parse_args()
 
     from repro.launch import mesh as M
+    if args.coordinator_only:
+        if args.coordinator is None or args.num_processes is None:
+            raise SystemExit("--coordinator-only needs --coordinator "
+                             "and --num-processes")
+        print(f"# serving coordination service at {args.coordinator} "
+              f"for {args.num_processes} processes ...", flush=True)
+        M.serve_coordinator(args.coordinator, args.num_processes)
+        return
+    if args.chaos is not None:
+        from repro.dist import faultinject
+        faultinject.configure(args.chaos)
+        print(f"# chaos armed: {args.chaos}")
     if args.coordinator is not None:
         # must run before any other jax use (device counts lock at init)
-        pid, nproc = M.dist_init(args.coordinator,
-                                 num_processes=args.num_processes,
-                                 process_id=args.process_id)
+        pid, nproc = M.dist_init(
+            args.coordinator, num_processes=args.num_processes,
+            process_id=args.process_id,
+            external_coordinator=args.external_coordinator)
         print(f"# joined fabric: process {pid}/{nproc}")
 
     import jax
@@ -95,19 +144,39 @@ def main():
                 "--mesh auto (or a shape covering every process's "
                 "devices)")
 
+    scfg = ServiceConfig(max_batch_slices=args.max_batch,
+                         max_wait_ms=args.max_wait_ms,
+                         cache_bytes=args.cache_bytes,
+                         launch_timeout_s=args.launch_timeout_s,
+                         heartbeat_s=args.heartbeat_s,
+                         max_queue_rows=args.queue_rows)
+
     if args.coordinator is not None and jax.process_index() != 0:
         # follower: contribute this process's devices until the leader
         # closes the fabric -- no local clients, no model training
-        scfg = ServiceConfig(max_batch_slices=args.max_batch,
-                             max_wait_ms=args.max_wait_ms,
-                             cache_bytes=args.cache_bytes)
         svc = SweepService(scfg, mesh=mesh)
         print(f"# follower {jax.process_index()} serving ...", flush=True)
-        svc.serve()
+        try:
+            svc.serve()
+        except Exception as e:
+            # typed fabric fault (leader death, eviction): the fabric is
+            # gone, so no exit barrier -- report and leave
+            print(f"# follower {jax.process_index()} fabric error: {e}")
+            svc.close()
+            return
         print(f"# follower {jax.process_index()} done "
               f"({svc.launches} collective launches joined)")
-        _exit_barrier()
+        if svc.stats()["transport"] == "gloo":
+            # post-recovery fabrics exchange over KV (gloo is poisoned
+            # after a faulted collective), so only an unfaulted run may
+            # align teardown with a gloo barrier
+            _exit_barrier()
         return
+
+    # construct the service BEFORE model training: the leader's heartbeat
+    # starts at construction, so followers joining the fabric can already
+    # distinguish "leader busy training" from "leader dead"
+    svc = SweepService(scfg, mesh=mesh)
 
     fields = args.fields.split(",")
     print(f"# training {args.compressor} grid models on {fields} ...")
@@ -128,9 +197,6 @@ def main():
         uc2_models[f] = (models, eps)
         hot[f] = slices[args.train_slices:]
 
-    scfg = ServiceConfig(max_batch_slices=args.max_batch,
-                         max_wait_ms=args.max_wait_ms,
-                         cache_bytes=args.cache_bytes)
     lat, lock = [], threading.Lock()
 
     def client(svc, cid: int, count: int):
@@ -149,7 +215,7 @@ def main():
                 lat.append(time.perf_counter() - t0)
 
     per_client = max(1, args.requests // args.clients)
-    with SweepService(scfg, mesh=mesh) as svc:
+    with svc:
         svc.warmup([(args.n, args.n)], grid_sizes=(1, 4),
                    row_buckets=(1, args.clients))
         t0 = time.perf_counter()
@@ -177,8 +243,12 @@ def main():
     print(f"cache: hit_rate={cache['hits'] / max(total_probes, 1):.2%} "
           f"({cache['hits']}/{total_probes}), entries={cache['entries']}, "
           f"bytes={cache['bytes']}", flush=True)
-    if args.coordinator is not None:
-        _exit_barrier()
+    if stats["recoveries"]:
+        print(f"recoveries={stats['recoveries']} epoch={stats['epoch']} "
+              f"transport={stats['transport']} procs={stats['procs']} "
+              f"rejected={stats['rejected']}")
+    if args.coordinator is not None and stats["transport"] == "gloo":
+        _exit_barrier()    # see the follower-side note on faulted fabrics
 
 
 if __name__ == "__main__":

@@ -58,6 +58,45 @@ leader drains the queue and broadcasts a shutdown header that releases
 the followers.  All processes must construct the service with the same
 ``ServiceConfig`` (the engine config is not re-broadcast per launch).
 
+Elastic fault tolerance
+-----------------------
+The fabric survives follower loss.  Every process heartbeats through
+the ``jax.distributed`` coordination-service KV store
+(``repro.dist.fault``); every collective launch runs in a sacrificial
+thread, bounded on the LEADER by ``ServiceConfig.launch_timeout_s``
+(size it to cover a first launch's executable compile -- the deadline
+cannot tell a slow compile from a wedged peer).  Followers carry no
+own-time deadline: every fault they must react to arrives as an epoch
+advance, leader heartbeat staleness, or the shutdown marker.  When a
+launch faults (a gloo peer raises "connection closed", or the deadline
+expires on a wedged peer) the leader attributes the fault by watching
+heartbeats, SHRINKS the mesh to the surviving processes
+(``fault.surviving_submesh``), bumps the fabric *epoch*, invalidates
+every executable compiled for the old mesh, and relaunches the
+in-flight batch -- pending futures complete bit-equal on the shrunken
+mesh (the sweep is row/eps independent, so the result does not depend
+on which devices computed it).  Post-recovery launches move off gloo
+entirely: a faulted gloo collective leaves stale pair connections that
+poison every later cross-process device collective in the cohort, so
+the recovered transport partitions each batch's rows across the
+survivors (contiguous blocks, proportional to their device share of
+the ``fault.surviving_submesh``), every process sweeps its block
+locally -- unsharded, since the poisoned gloo state breaks even
+process-local multi-device collectives -- and the row blocks travel
+back through the coordination-service KV store, so no device
+collective of any kind runs again on that fabric.
+Shrunk to one process, the leader degrades to the single-process path
+and keeps serving.  Followers mirror the epoch state machine: a
+follower that faults rejoins the published epoch at a bounded barrier,
+learns it was evicted (:class:`repro.dist.fault.FabricError` with
+``kind="evicted"``), or detects leader death by heartbeat staleness
+(``kind="leader_lost"``) instead of blocking forever.  Fabric-scoped
+failures fail ALL pending futures with the typed ``FabricError`` and
+release :meth:`serve`; request-scoped failures still fail only their
+batch.  Admission control: with ``max_queue_rows`` set, ``submit_*``
+raises :class:`RetryAfter` (carrying a backoff estimate) instead of
+queueing unboundedly when the fabric falls behind.
+
 Usage::
 
     from repro.serve.sweep_service import SweepService, ServiceConfig
@@ -76,6 +115,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import itertools
+import json
 import threading
 import time
 from concurrent.futures import Future
@@ -85,10 +126,24 @@ import numpy as np
 
 from repro.core import predictors as P
 from repro.core import usecases as UC
+from repro.dist import fault as F
+from repro.dist import faultinject as FI
 from repro.dist import sweep as DS
+
+try:                                  # runtime/collective failure type
+    from jax._src.lib import xla_client as _xc
+    _XLA_ERRORS: tuple = (_xc.XlaRuntimeError,)
+except Exception:                     # pragma: no cover - very old jax
+    _XLA_ERRORS = ()
 
 
 _EPS_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
+
+# multi-process services in one program take KV-namespace numbers from a
+# process-local counter: lockstep construction order is already required
+# by the collective fabric, so the counters agree across processes and a
+# second service never reads the first one's shutdown/epoch keys
+_FABRIC_COUNTER = itertools.count()
 
 
 def _row_bucket(k: int) -> int:
@@ -122,6 +177,48 @@ def slice_digest(x) -> str:
     return h.hexdigest()
 
 
+class RetryAfter(RuntimeError):
+    """Backpressure rejection: the service's bounded request queue is
+    full (``ServiceConfig.max_queue_rows``).  ``retry_after_s`` is the
+    service's estimate of when capacity frees up (one batch's worth of
+    drain time); ``pending_rows`` is the queue depth that triggered the
+    rejection.  Raised from ``submit_*`` -- nothing was enqueued."""
+
+    def __init__(self, message: str, *, retry_after_s: float,
+                 pending_rows: int):
+        self.retry_after_s = float(retry_after_s)
+        self.pending_rows = int(pending_rows)
+        super().__init__(
+            f"{message} ({pending_rows} rows pending; retry after "
+            f"~{self.retry_after_s:.3f}s)")
+
+
+class _Boxed:
+    """Run ``fn`` on a sacrificial daemon thread so a hung collective
+    can be *abandoned*: gloo/XLA collectives are not interruptible, so
+    the bounded waits in the fabric park them here and walk away when
+    the deadline expires (the thread dies with the process)."""
+
+    def __init__(self, fn, name: str):
+        self.value = None
+        self.error: Optional[BaseException] = None
+        self.done = threading.Event()
+
+        def run():
+            try:
+                self.value = fn()
+            except BaseException as exc:          # noqa: BLE001
+                self.error = exc
+            finally:
+                self.done.set()
+
+        self.thread = threading.Thread(target=run, name=name, daemon=True)
+        self.thread.start()
+
+    def wait(self, timeout: float) -> bool:
+        return self.done.wait(timeout)
+
+
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     max_batch_slices: int = 64       # flush when this many rows are pending
@@ -129,6 +226,10 @@ class ServiceConfig:
     cache_bytes: int = 4 << 20       # cross-request feature-cache budget
     max_eps_per_launch: int = 32     # chunk wider eps unions across launches
     cache_admit_after: int = 2       # sightings before a digest is cached
+    launch_timeout_s: float = 60.0   # leader's bound per collective launch
+    #   (must cover a first launch's compile; followers have no own bound)
+    heartbeat_s: float = 0.5         # fabric liveness publish interval
+    max_queue_rows: int = 0          # 0 = unbounded; else RetryAfter beyond
     pcfg: P.PredictorConfig = dataclasses.field(
         default_factory=P.PredictorConfig)
 
@@ -258,7 +359,9 @@ class SweepService:
     The mesh is captured at construction (explicit ``mesh=`` argument or
     the thread's active ``dist.sharding.use_mesh``) and reused for every
     launch -- the worker thread never depends on the caller's thread-local
-    mesh context.
+    mesh context.  After elastic recovery the captured mesh is replaced
+    by the survivor submesh (``self.mesh`` always names the CURRENT
+    fabric; ``self._mesh0`` keeps the construction-time one).
     """
 
     HDR_LEN = 8                      # [op, k, k_pad, rank, t0, t1, t2, e_pad]
@@ -272,21 +375,53 @@ class SweepService:
         self._queue: "collections.deque[_Request]" = collections.deque()
         self._cond = threading.Condition()
         self._stop = False
+        self._closed = False
         self._launches = 0
         self._rows_launched = 0
         self._pad_rows = 0
         self._batches = 0
         self._requests = collections.Counter()
-        self._executables: set = set()   # (mesh shape, k_pad, m, n, e_pad, cfg)
+        self._executables: set = set()   # (mesh key, k_pad, m, n, e_pad, cfg)
+        self._fabric_error: Optional[BaseException] = None
         # leader/follower roles on a process-spanning mesh: the mesh's
         # first process owns the queue, everyone else joins collectives
         self._multiproc = DS.mesh_spans_processes(self.mesh)
+        self._mesh0 = self.mesh
+        self._epoch = 0              # bumps on every elastic recovery
+        self._seq = 0                # post-recovery KV launch sequence
+        self._transport = "gloo"     # "gloo" (epoch 0) | "kv" (recovered)
+        self._recoveries = 0
+        self._last_recovery_s = 0.0
+        self._rejected = 0
+        self._ema_batch_s = 0.0      # drain-time estimate for RetryAfter
         if self._multiproc:
             import jax
-            self.role = ("leader" if jax.process_index() ==
-                         DS.mesh_processes(self.mesh)[0] else "follower")
+            self._me = jax.process_index()
+            self._procs = list(DS.mesh_processes(self.mesh))
+            self._leader_pid = self._procs[0]
+            self.role = ("leader" if self._me == self._leader_pid
+                         else "follower")
+            self._kv = F.kv_client()
+            self._kvp = f"reprosvc/{next(_FABRIC_COUNTER)}"
         else:
+            self._me, self._procs, self._leader_pid = 0, [0], 0
             self.role = "leader"
+            self._kv, self._kvp = None, "reprosvc/-"
+        self._procs0 = list(self._procs)
+        self._local_mesh = None      # per-process compute mesh post-recovery
+        self._proc_devs: dict = {}   # pid -> device share (set at recovery)
+        self._hb: Optional[F.Heartbeat] = None
+        self._monitor: Optional[F.PeerMonitor] = None
+        if self._multiproc and self._kv is not None:
+            self._hb = F.Heartbeat(self._kv, self._kvp, self._me,
+                                   interval_s=self.scfg.heartbeat_s).start()
+            self._monitor = F.PeerMonitor(self._kv, self._kvp)
+            self._monitor.track(self._procs)
+        # a follower must not declare leader_lost before the leader's
+        # first beat could plausibly arrive (its process may still be
+        # training models before constructing the service)
+        self._first_beat_deadline = time.monotonic() + max(
+            self.scfg.launch_timeout_s, 2 * self._stale_after)
         # serializes collective launches on the leader (worker batches vs
         # main-thread warmup/close): followers see one header stream
         self._launch_lock = threading.Lock()
@@ -294,6 +429,22 @@ class SweepService:
         self._worker = threading.Thread(
             target=target, name=f"sweep-service-{self.role}", daemon=True)
         self._worker.start()
+
+    # ------------------------------------------------------------------
+    # fabric timing policy
+    # ------------------------------------------------------------------
+
+    @property
+    def _stale_after(self) -> float:
+        """Heartbeat silence that marks a peer dead/wedged: a few missed
+        beats, but never longer than one launch deadline."""
+        return max(1.0, min(self.scfg.launch_timeout_s,
+                            6 * self.scfg.heartbeat_s))
+
+    @property
+    def _barrier_timeout(self) -> float:
+        return min(self.scfg.launch_timeout_s,
+                   max(2.0, 2 * self._stale_after))
 
     # ------------------------------------------------------------------
     # public API
@@ -390,6 +541,12 @@ class SweepService:
                 "batches": self._batches,
                 "executables": len(self._executables),
                 "requests": dict(self._requests),
+                "epoch": self._epoch,
+                "transport": self._transport,
+                "recoveries": self._recoveries,
+                "last_recovery_s": self._last_recovery_s,
+                "rejected": self._rejected,
+                "procs": list(self._procs),
                 "cache": self.cache.stats()}
 
     @property
@@ -405,7 +562,9 @@ class SweepService:
         buckets) so first requests don't pay compile latency.  On a
         process-spanning mesh the leader's warmup launches ride the
         collective fabric, so followers precompile the same executables
-        (followers themselves call :meth:`serve`, not ``warmup``)."""
+        (followers themselves call :meth:`serve`, not ``warmup``).  A
+        follower fault during warmup recovers exactly like one during
+        serving: the warmup launch retries on the shrunken mesh."""
         if self.role == "follower":
             raise RuntimeError(
                 "warmup runs on the leader; followers precompile by "
@@ -427,13 +586,16 @@ class SweepService:
 
         The follower's main loop: joins collective launches until the
         leader's ``close()`` broadcasts shutdown.  On a leader this just
-        waits for ``close()`` from another thread.  Raises if the worker
-        died on an error instead of a clean shutdown (a silently-exited
-        follower would wedge the leader's next collective).
+        waits for ``close()`` from another thread.  Raises the typed
+        :class:`repro.dist.fault.FabricError` when the fabric failed
+        (leader death, eviction, unrecoverable fault) instead of
+        returning as if shutdown completed cleanly.
         """
         self._worker.join()
-        err = getattr(self, "_fabric_error", None)
+        err = self._fabric_error
         if err is not None:
+            if isinstance(err, F.FabricError):
+                raise err
             raise RuntimeError(
                 f"sweep-service {self.role} worker died; the fabric is "
                 "wedged (restart every process)") from err
@@ -442,23 +604,41 @@ class SweepService:
         """Flush pending requests and stop the worker thread.
 
         Leader of a multi-process service: after the queue drains, a
-        shutdown header releases every follower out of :meth:`serve`.
+        shutdown header (gloo fabric) or KV shutdown marker (recovered
+        fabric) releases every follower out of :meth:`serve`, then the
+        leader waits -- bounded -- for the followers' goodbye markers so
+        its embedded coordination service outlives their last KV reads.
+        Idempotent, including after a fabric failure (no further
+        collectives are attempted on a failed fabric).
         Follower: blocks until the leader shuts the fabric down.
         """
         if self.role == "follower":
             self._worker.join()
+            if self._hb is not None:
+                self._hb.stop()
             return
         with self._cond:
-            if self._stop:
+            if self._closed:
                 return
+            self._closed = True
             self._stop = True
             self._cond.notify_all()
         self._worker.join()
-        if self._multiproc:
-            from jax.experimental import multihost_utils as MH
-            with self._launch_lock:
-                MH.broadcast_one_to_all(
-                    np.zeros(self.HDR_LEN, np.int64))     # OP_SHUTDOWN
+        if len(self._procs0) > 1:
+            if (self._transport == "gloo" and self._fabric_error is None
+                    and len(self._procs) > 1):
+                from jax.experimental import multihost_utils as MH
+                with self._launch_lock:
+                    box = _Boxed(
+                        lambda: MH.broadcast_one_to_all(
+                            np.zeros(self.HDR_LEN, np.int64)),  # OP_SHUTDOWN
+                        "svc-shutdown-bcast")
+                    box.wait(self.scfg.launch_timeout_s)
+            if self._kv is not None:
+                F.kv_set(self._kv, f"{self._kvp}/shutdown", "closed")
+                self._wait_byes()
+        if self._hb is not None:
+            self._hb.stop()
 
     def __enter__(self) -> "SweepService":
         return self
@@ -477,7 +657,19 @@ class SweepService:
                 "leader (the mesh's first process) and call serve() here")
         with self._cond:
             if self._stop:
-                raise RuntimeError("SweepService is closed")
+                err = self._fabric_error
+                raise RuntimeError("SweepService is closed") from err
+            limit = self.scfg.max_queue_rows
+            pending = sum(r.rows for r in self._queue) if limit else 0
+            # never reject into an empty queue: a single over-wide
+            # request must still be servable (it flushes alone)
+            if limit and pending and pending + req.rows > limit:
+                self._rejected += 1
+                raise RetryAfter(
+                    "sweep-service queue is full",
+                    retry_after_s=max(self.scfg.max_wait_ms / 1e3,
+                                      self._ema_batch_s),
+                    pending_rows=pending)
             self._queue.append(req)
             self._requests[req.kind] += 1
             self._cond.notify_all()
@@ -488,12 +680,37 @@ class SweepService:
             batch = self._next_batch()
             if batch is None:
                 return
+            t0 = time.perf_counter()
             try:
                 self._process(batch)
-            except Exception as exc:  # fail the whole batch, not the server
+            except F.FabricError as exc:
+                # fabric-scoped: the collective launch path exhausted
+                # recovery -- fail EVERYTHING and release serve()
+                self._fail_fabric(exc, batch)
+                return
+            except Exception as exc:  # request-scoped: fail the batch only
                 for req in batch:
                     if not req.future.done():
                         req.future.set_exception(exc)
+            else:
+                dt = time.perf_counter() - t0
+                self._ema_batch_s = (dt if not self._ema_batch_s
+                                     else 0.7 * self._ema_batch_s + 0.3 * dt)
+
+    def _fail_fabric(self, exc: BaseException, batch: List[_Request]) -> None:
+        """Fabric-scoped failure: poison the service, fail every pending
+        future (in-flight batch AND queued requests), release serve()."""
+        self._fabric_error = exc
+        with self._cond:
+            self._stop = True
+            drained = list(self._queue)
+            self._queue.clear()
+            self._cond.notify_all()
+        for req in list(batch) + drained:
+            if not req.future.done():
+                req.future.set_exception(exc)
+        if self._kv is not None:   # release any followers still joined
+            F.kv_set(self._kv, f"{self._kvp}/shutdown", "fabric-error")
 
     def _next_batch(self) -> Optional[List[_Request]]:
         """Block until a batch is ready: pending rows reach
@@ -529,75 +746,499 @@ class SweepService:
 
     def _sig(self, k_pad: int, shape: Tuple[int, ...], e_pad: int,
              cfg: P.PredictorConfig) -> tuple:
+        # device ids distinguish a survivor submesh from the original
+        # mesh of the same shape, so recovery invalidates by construction
         mesh_key = (None if self.mesh is None
-                    else (self.mesh.axis_names, self.mesh.devices.shape))
+                    else (self.mesh.axis_names, self.mesh.devices.shape,
+                          tuple(d.id for d in self.mesh.devices.flat)))
         return (mesh_key, k_pad, shape, e_pad, cfg)
 
     # ------------------------------------------------------------------
     # collective launch fabric (leader/follower)
     # ------------------------------------------------------------------
 
+    def _bcast(self, x):
+        """One gloo payload broadcast (fault-injection site ``bcast``)."""
+        from jax.experimental import multihost_utils as MH
+        FI.fire("bcast")
+        return MH.broadcast_one_to_all(x)
+
     def _collective_sweep(self, stack: np.ndarray, epss: np.ndarray,
                           cfg: P.PredictorConfig, k_pad: int):
-        """One ``sweep_padded`` launch.  Single-process: returns the
-        (possibly still device-sharded) padded result.  Process-spanning
-        mesh: broadcasts the launch descriptor + payload so followers
-        enter the same collective, and returns the all-gathered host
-        (k_pad, e, 2) array."""
+        """One ``sweep_padded`` launch, surviving follower loss.
+
+        Single-process: returns the (possibly still device-sharded)
+        padded result.  Process-spanning mesh: broadcasts the launch
+        descriptor + payload so followers enter the same collective
+        (``multihost_utils.broadcast_one_to_all`` on the gloo epoch, the
+        KV launch transport after recovery) and returns the gathered
+        host (k_pad, e, 2) array.  A retriable fabric fault shrinks the
+        mesh (:meth:`_recover`) and relaunches -- the returned rows are
+        bit-equal regardless of which fabric generation computed them.
+        """
         if not self._multiproc:
             return DS.sweep_padded(stack, epss, cfg, k_pad=k_pad,
                                    mesh=self.mesh)
-        from jax.experimental import multihost_utils as MH
-        trailing = stack.shape[1:]
-        hdr = np.zeros(self.HDR_LEN, np.int64)
-        hdr[0], hdr[1], hdr[2], hdr[3] = (
-            self.OP_LAUNCH, stack.shape[0], k_pad, stack.ndim)
-        hdr[4 + (3 - len(trailing)):7] = trailing
-        hdr[7] = len(epss)
         with self._launch_lock:
-            MH.broadcast_one_to_all(hdr)
-            # both sides consume the broadcast copies, so leader and
-            # followers feed byte-identical inputs to the collective
-            stack = np.asarray(MH.broadcast_one_to_all(
-                np.ascontiguousarray(stack, np.float32)))
-            epss = np.asarray(MH.broadcast_one_to_all(
-                np.ascontiguousarray(epss, np.float32)))
-            out = DS.sweep_padded(stack, epss, cfg, k_pad=k_pad,
-                                  mesh=self.mesh)
-            return DS.gather_rows(out)
+            err: Optional[F.FabricError] = None
+            for _ in range(len(self._procs0) + 1):
+                try:
+                    return self._collective_sweep_once(stack, epss, cfg,
+                                                       k_pad)
+                except F.FabricError as exc:
+                    if not exc.retriable:
+                        raise
+                    err = exc
+                    self._recover(exc)
+            raise F.FabricError(
+                "collective launch kept failing across mesh shrinks",
+                kind="failed") from err
+
+    def _collective_sweep_once(self, stack: np.ndarray, epss: np.ndarray,
+                               cfg: P.PredictorConfig, k_pad: int):
+        if not self._multiproc:      # degraded to leader-local serving
+            return DS.sweep_padded(stack, epss, cfg, k_pad=k_pad,
+                                   mesh=self.mesh)
+        FI.fire("leader_launch")
+        stack = np.ascontiguousarray(stack, np.float32)
+        epss = np.ascontiguousarray(epss, np.float32)
+        if self._transport == "gloo":
+            trailing = stack.shape[1:]
+            hdr = np.zeros(self.HDR_LEN, np.int64)
+            hdr[0], hdr[1], hdr[2], hdr[3] = (
+                self.OP_LAUNCH, stack.shape[0], k_pad, stack.ndim)
+            hdr[4 + (3 - len(trailing)):7] = trailing
+            hdr[7] = len(epss)
+
+            def launch():
+                self._bcast(hdr)
+                # both sides consume the broadcast copies, so leader and
+                # followers feed byte-identical inputs to the collective
+                st = np.asarray(self._bcast(stack))
+                ep = np.asarray(self._bcast(epss))
+                out = DS.sweep_padded(st, ep, cfg, k_pad=k_pad,
+                                      mesh=self.mesh)
+                return DS.gather_rows(out)
+
+            return self._bounded_collective(launch)
+        # post-recovery transport: launch descriptor + payload + result
+        # blocks through the coordination-service KV store.  A faulted
+        # gloo collective leaves stale pair connections that poison any
+        # later cross-process device collective in this cohort, so each
+        # survivor sweeps its contiguous row block on its own LOCAL mesh
+        # (row results are mesh-independent, hence still bit-equal) and
+        # no cross-process collective ever runs on a recovered fabric.
+        seq = self._seq + 1
+        base = f"{self._kvp}/l/{self._epoch}/{seq}"
+        e = int(epss.shape[0])
+        parts = self._partition(stack.shape[0])
+        F.kv_put_bytes(self._kv, f"{base}/stack", stack.tobytes())
+        F.kv_put_bytes(self._kv, f"{base}/eps", epss.tobytes())
+        F.kv_set(self._kv, f"{base}/hdr", json.dumps(
+            {"shape": list(stack.shape), "e": e,
+             "parts": {str(p): list(lohi) for p, lohi in parts.items()}}))
+        lo, hi = parts[self._me]
+        blocks = {self._me: self._local_rows(stack[lo:hi], epss, cfg, e)}
+        deadline = time.monotonic() + self.scfg.launch_timeout_s
+        lost = []
+        for pid in self._procs:
+            if pid == self._me:
+                continue
+            plo, phi = parts[pid]
+            if phi <= plo:
+                blocks[pid] = np.zeros((0, e, 2), np.float32)
+                continue
+            data = self._collect_block(f"{base}/out/{pid}", pid, deadline)
+            if data is None or len(data) != (phi - plo) * e * 2 * 4:
+                lost.append(pid)
+            else:
+                blocks[pid] = np.frombuffer(
+                    data, np.float32).reshape(phi - plo, e, 2)
+        if lost:
+            raise F.FabricError(
+                "survivor(s) never returned their row blocks",
+                kind="follower_lost", lost=lost, retriable=True)
+        self._seq = seq
+        return np.concatenate([blocks[p] for p in self._procs], axis=0)
+
+    def _collect_block(self, key: str, pid: int,
+                       deadline: float) -> Optional[bytes]:
+        """Wait for ``pid``'s row block under the launch deadline,
+        polling in short slices so a peer that DIES mid-launch is
+        detected in one heartbeat-staleness window instead of burning
+        the whole deadline (a slow-but-alive peer still gets all of
+        it)."""
+        while True:
+            rem_ms = int((deadline - time.monotonic()) * 1000)
+            if rem_ms <= 0:
+                return None
+            data = F.kv_get_bytes(self._kv, key, min(500, rem_ms))
+            if data is not None:
+                return data
+            if self._monitor is not None:
+                self._monitor.poll()
+                if self._monitor.age(pid) > self._stale_after:
+                    return None
+
+    def _partition(self, k: int) -> dict:
+        """Contiguous row blocks {pid: (lo, hi)} over the current procs,
+        proportional to each survivor's device share."""
+        counts = [max(1, self._proc_devs.get(p, 1)) for p in self._procs]
+        total = sum(counts)
+        parts, lo, cum = {}, 0, 0
+        for p, c in zip(self._procs, counts):
+            cum += c
+            hi = (k * cum) // total
+            parts[p] = (lo, hi)
+            lo = hi
+        return parts
+
+    def _local_rows(self, stack: np.ndarray, epss: np.ndarray,
+                    cfg: P.PredictorConfig, e: int) -> np.ndarray:
+        """Sweep ``stack`` on this process's local mesh, rows to host."""
+        k = stack.shape[0]
+        if k == 0:
+            return np.zeros((0, e, 2), np.float32)
+        out = DS.sweep_padded(stack, epss, cfg, k_pad=_row_bucket(k),
+                              mesh=self._local_mesh)
+        return np.asarray(DS.gather_rows(out))[:k]
+
+    def _bounded_collective(self, fn):
+        """Run one collective on a sacrificial thread under the launch
+        deadline; translate peer faults into a retriable FabricError."""
+        box = _Boxed(fn, "svc-collective")
+        if box.wait(self.scfg.launch_timeout_s):
+            if box.error is None:
+                return box.value
+            lost = self._observe_lost()
+            if (not lost and isinstance(box.error, Exception)
+                    and not isinstance(box.error, _XLA_ERRORS)):
+                # every follower kept heartbeating and the failure is a
+                # plain Python error: a genuine compute/shape problem,
+                # scoped to this batch -- not a fabric fault.  A runtime
+                # (gloo/dispatch) error with fresh heartbeats still
+                # recovers: lost=() keeps every survivor and just moves
+                # the fabric off the poisoned gloo transport.
+                raise box.error
+            raise F.FabricError(
+                f"collective launch failed: "
+                f"{type(box.error).__name__}: {box.error}",
+                kind="follower_lost", lost=lost, retriable=True) \
+                from box.error
+        lost = self._observe_lost()
+        if not lost:
+            # deadline expired with fresh heartbeats everywhere: a
+            # wedged-but-alive peer is indistinguishable from inside the
+            # collective, so evict ALL followers and serve leader-local
+            # (always correct, never wedged)
+            lost = [p for p in self._procs if p != self._me]
+        raise F.FabricError(
+            f"collective launch exceeded launch_timeout_s="
+            f"{self.scfg.launch_timeout_s}",
+            kind="follower_lost", lost=lost, retriable=True)
+
+    def _observe_lost(self) -> list:
+        """Attribute a launch fault: watch follower heartbeats for one
+        staleness window, return the pids that never advanced."""
+        followers = [p for p in self._procs if p != self._me]
+        if self._monitor is None or not followers:
+            return followers
+        return self._monitor.observe_stale(followers, self._stale_after)
+
+    def _recover(self, err: F.FabricError) -> None:
+        """Shrink the fabric to the survivors of ``err`` and rendezvous
+        them at a new epoch (leader side)."""
+        t0 = time.perf_counter()
+        if self._kv is None:
+            raise F.FabricError(
+                "cannot recover: no coordination-service KV store "
+                "(fabric built without jax.distributed?)",
+                kind="failed") from err
+        dead = set(err.lost)
+        alive = [p for p in self._procs if p == self._me or p not in dead]
+        for _ in range(len(self._procs0) + 2):
+            self._epoch += 1
+            F.kv_set(self._kv, f"{self._kvp}/epoch", json.dumps(
+                {"epoch": self._epoch, "procs": alive}))
+            if len(alive) <= 1:
+                break
+            if F.fabric_barrier(self._kv, f"{self._kvp}-rec-{self._epoch}",
+                                self._barrier_timeout, alive):
+                break
+            # a survivor missed the rendezvous: attribute and shed (all
+            # followers when unattributable), then re-publish
+            stale = self._monitor.observe_stale(
+                [p for p in alive if p != self._me], self._stale_after)
+            shed = set(stale) or {p for p in alive if p != self._me}
+            alive = [p for p in alive if p == self._me or p not in shed]
+        self._procs = alive
+        self._adopt_kv_fabric(alive)
+        if len(alive) <= 1:
+            # last one standing: degrade to the single-process path
+            self._multiproc = False
+        self._recoveries += 1
+        self._last_recovery_s = time.perf_counter() - t0
+
+    def _adopt_kv_fabric(self, alive: Sequence[int]) -> None:
+        """Switch this process onto the recovered (KV-transport,
+        local-compute) fabric: row shares from the survivor submesh,
+        compute on the process-local mesh, old-mesh executables out."""
+        sub = F.surviving_submesh(self._mesh0, alive)
+        self._proc_devs = {
+            p: sum(1 for d in sub.devices.flat if d.process_index == p)
+            for p in alive}
+        # a faulted gloo collective poisons even process-LOCAL
+        # multi-device collectives (they dispatch through the same gloo
+        # state), so recovered compute runs unsharded per process
+        self._local_mesh = None
+        self.mesh = self._local_mesh
+        self._transport = "kv"
+        self._seq = 0
+        DS.invalidate_mesh_caches()
+        self._executables.clear()
+
+    def _wait_byes(self) -> None:
+        """Bounded wait for follower goodbye markers at shutdown, so the
+        leader's embedded coordination service stays up for their last
+        KV reads (a dead follower is excused by heartbeat staleness)."""
+        others = [p for p in self._procs0 if p != self._me]
+        if not others or self._kv is None:
+            return
+        deadline = time.monotonic() + max(2.0, 2 * self._stale_after)
+        while time.monotonic() < deadline:
+            byes = set()
+            for key in F.kv_dir(self._kv, f"{self._kvp}/bye/"):
+                try:
+                    byes.add(int(key.rsplit("/", 1)[-1]))
+                except ValueError:
+                    continue
+            pending = [p for p in others if p not in byes]
+            if pending and self._monitor is not None:
+                self._monitor.poll()
+                pending = [p for p in pending
+                           if self._monitor.age(p) <= self._stale_after]
+            if not pending:
+                return
+            time.sleep(0.05)
+
+    # ------------------------------------------------------------------
+    # follower: launch mirror + epoch recovery
+    # ------------------------------------------------------------------
+
+    def _shutdown_set(self) -> bool:
+        return (self._kv is not None and
+                F.kv_get(self._kv, f"{self._kvp}/shutdown", 30) is not None)
+
+    def _read_epoch(self) -> Optional[dict]:
+        raw = None if self._kv is None else \
+            F.kv_get(self._kv, f"{self._kvp}/epoch", 30)
+        if raw is None:
+            return None
+        try:
+            desc = json.loads(raw)
+            return {"epoch": int(desc["epoch"]),
+                    "procs": [int(p) for p in desc["procs"]]}
+        except Exception:
+            return None
+
+    def _epoch_advanced(self) -> bool:
+        desc = self._read_epoch()
+        return desc is not None and desc["epoch"] > self._epoch
+
+    def _leader_stale(self) -> bool:
+        if self._monitor is None:
+            return False
+        self._monitor.poll()
+        if not self._monitor.seen(self._leader_pid):
+            # never beat: give the leader one full startup allowance
+            return time.monotonic() > self._first_beat_deadline
+        return self._monitor.age(self._leader_pid) > 2 * self._stale_after
 
     def _follower_loop(self) -> None:
-        """Mirror the leader's header stream: join every collective
-        launch with the broadcast payload until shutdown."""
+        """Mirror the leader's launch stream -- joining every collective
+        with the broadcast payload until shutdown -- and mirror its
+        epoch state machine across faults."""
         import traceback
-        from jax.experimental import multihost_utils as MH
         try:
             while True:
-                hdr = np.asarray(MH.broadcast_one_to_all(
-                    np.zeros(self.HDR_LEN, np.int64)))
-                if int(hdr[0]) == self.OP_SHUTDOWN:
+                step = (self._follower_gloo_step
+                        if self._transport == "gloo"
+                        else self._follower_kv_step)
+                res = step()
+                if res == "shutdown":
                     return
-                k, k_pad, rank = int(hdr[1]), int(hdr[2]), int(hdr[3])
-                trailing = tuple(int(d) for d in hdr[4 + (3 - (rank - 1)):7])
-                stack = np.asarray(MH.broadcast_one_to_all(
-                    np.zeros((k,) + trailing, np.float32)))
-                epss = np.asarray(MH.broadcast_one_to_all(
-                    np.zeros(int(hdr[7]), np.float32)))
-                out = DS.sweep_padded(stack, epss, self.scfg.pcfg,
-                                      k_pad=k_pad, mesh=self.mesh)
-                DS.gather_rows(out)
-                self._launches += 1
-                self._rows_launched += k
-                self._pad_rows += k_pad - k
-                self._executables.add(self._sig(k_pad, trailing,
-                                                len(epss), self.scfg.pcfg))
+                if res == "fault":
+                    self._follower_recover()
         except BaseException as exc:     # noqa: BLE001 -- must not die
-            # a dead follower would wedge the leader's next collective;
-            # record + surface the error loudly so serve() re-raises
-            # instead of returning as if shutdown completed cleanly
+            # surface the error loudly so serve() re-raises instead of
+            # returning as if shutdown completed cleanly
             self._fabric_error = exc
-            traceback.print_exc()
-            raise
+            if not isinstance(exc, F.FabricError):
+                traceback.print_exc()
+        finally:
+            # goodbye marker: tells the leader this process is done
+            # reading the KV store, so it may tear the coordinator down
+            if self._kv is not None:
+                F.kv_set(self._kv, f"{self._kvp}/bye/{self._me}", "1")
+            if self._hb is not None:
+                self._hb.stop()
+
+    def _follower_gloo_step(self) -> Optional[str]:
+        # phase 1: park on the header broadcast, watching for shutdown,
+        # an epoch advance (the leader recovered without this op), and
+        # leader death -- a follower must never block forever
+        box = _Boxed(lambda: self._bcast(np.zeros(self.HDR_LEN, np.int64)),
+                     "svc-follower-hdr")
+        while not box.wait(0.2):
+            if self._shutdown_set():
+                return "shutdown"
+            if self._epoch_advanced():
+                return "fault"
+            if self._leader_stale():
+                raise F.FabricError("leader stopped heartbeating",
+                                    kind="leader_lost",
+                                    lost=(self._leader_pid,))
+        if box.error is not None:
+            return "fault"           # peer died mid-broadcast
+        hdr = np.asarray(box.value)
+        if int(hdr[0]) == self.OP_SHUTDOWN:
+            return "shutdown"
+        k, k_pad, rank = int(hdr[1]), int(hdr[2]), int(hdr[3])
+        trailing = tuple(int(d) for d in hdr[4 + (3 - (rank - 1)):7])
+        e = int(hdr[7])
+
+        def join():
+            FI.fire("follower_launch")
+            stack = np.asarray(self._bcast(
+                np.zeros((k,) + trailing, np.float32)))
+            epss = np.asarray(self._bcast(np.zeros(e, np.float32)))
+            out = DS.sweep_padded(stack, epss, self.scfg.pcfg,
+                                  k_pad=k_pad, mesh=self.mesh)
+            DS.gather_rows(out)
+
+        if self._bounded_join(join) == "fault":
+            return "fault"
+        self._count_follower_launch(k, k_pad, trailing, e)
+        return None
+
+    def _follower_kv_step(self) -> Optional[str]:
+        base = f"{self._kvp}/l/{self._epoch}/{self._seq + 1}"
+        raw = F.kv_get(self._kv, f"{base}/hdr", 500)
+        if raw is None:
+            if self._shutdown_set():
+                return "shutdown"
+            if self._epoch_advanced():
+                return "fault"
+            if self._leader_stale():
+                raise F.FabricError("leader stopped heartbeating",
+                                    kind="leader_lost",
+                                    lost=(self._leader_pid,))
+            return None              # keep polling
+        hdr = json.loads(raw)
+        lo, hi = hdr["parts"].get(str(self._me), (0, 0))
+        timeout_ms = int(self.scfg.launch_timeout_s * 1000)
+
+        def join():
+            FI.fire("kv_launch")
+            if hi <= lo:
+                return
+            st = F.kv_get_bytes(self._kv, f"{base}/stack", timeout_ms)
+            ep = F.kv_get_bytes(self._kv, f"{base}/eps", timeout_ms)
+            if st is None or ep is None:
+                raise F.FabricError("KV launch payload never arrived",
+                                    kind="timeout")
+            stack = np.frombuffer(st, np.float32).reshape(
+                hdr["shape"])[lo:hi].copy()
+            epss = np.frombuffer(ep, np.float32).copy()
+            rows = self._local_rows(stack, epss, self.scfg.pcfg,
+                                    int(hdr["e"]))
+            F.kv_put_bytes(self._kv, f"{base}/out/{self._me}",
+                           np.ascontiguousarray(rows, np.float32).tobytes())
+
+        if self._bounded_join(join) == "fault":
+            return "fault"
+        self._seq += 1
+        shape = tuple(hdr["shape"])
+        self._count_follower_launch(
+            hi - lo, _row_bucket(hi - lo) if hi > lo else 0,
+            shape[1:], int(hdr["e"]))
+        return None
+
+    def _bounded_join(self, join) -> Optional[str]:
+        """Phase 2 of a follower step: run the collective join on a
+        sacrificial thread, abandoning it the moment the leader
+        publishes a new epoch (this op will never complete) or stops
+        heartbeating.  There is deliberately NO own-time deadline here:
+        a follower never evicts anyone, so every fault it must react to
+        is attributable -- eviction/shrink arrives as an epoch advance,
+        leader death as heartbeat staleness, fabric poisoning as the
+        shutdown marker -- while a bare deadline can only misfire on a
+        SLOW join (e.g. first-launch compile), abandoning work the
+        leader is still waiting for."""
+        jb = _Boxed(join, "svc-follower-join")
+        while not jb.wait(0.2):
+            if self._epoch_advanced():
+                return "fault"
+            if self._shutdown_set():
+                return "fault"       # recover observes the marker
+            if self._leader_stale():
+                raise F.FabricError("leader died mid-launch",
+                                    kind="leader_lost",
+                                    lost=(self._leader_pid,))
+        return "fault" if jb.error is not None else None
+
+    def _count_follower_launch(self, k: int, k_pad: int, trailing: tuple,
+                               e: int) -> None:
+        self._launches += 1
+        self._rows_launched += k
+        self._pad_rows += k_pad - k
+        self._executables.add(self._sig(k_pad, tuple(trailing), e,
+                                        self.scfg.pcfg))
+
+    def _follower_recover(self) -> None:
+        """Rejoin the fabric at the epoch the leader published (or learn
+        this process was evicted / the leader is gone).  Bounded."""
+        if self._kv is None:
+            raise F.FabricError(
+                "no coordination-service KV store to recover through",
+                kind="failed")
+        deadline = time.monotonic() + max(self.scfg.launch_timeout_s,
+                                          4 * self._stale_after)
+        while True:
+            desc = self._read_epoch()
+            if desc is not None and desc["epoch"] > self._epoch:
+                if self._me not in desc["procs"]:
+                    raise F.FabricError(
+                        "this process was dropped from the recovered "
+                        "fabric", kind="evicted", lost=(self._me,))
+                if F.fabric_barrier(
+                        self._kv, f"{self._kvp}-rec-{desc['epoch']}",
+                        self._barrier_timeout, desc["procs"]):
+                    self._epoch = desc["epoch"]
+                    self._procs = desc["procs"]
+                    self._adopt_kv_fabric(desc["procs"])
+                    return
+                # missed this rendezvous window: the leader may publish
+                # a further-shrunk epoch (possibly without us) -- loop
+            if self._shutdown_set():
+                return               # next step observes the marker
+            if self._leader_stale():
+                raise F.FabricError("leader lost during recovery",
+                                    kind="leader_lost",
+                                    lost=(self._leader_pid,))
+            if time.monotonic() > deadline:
+                if desc is None or desc["epoch"] <= self._epoch:
+                    # the epoch never moved and the leader is still
+                    # heartbeating: there is no fabric fault to recover
+                    # FROM (a join was abandoned spuriously, or an
+                    # asymmetric gloo error the leader hasn't hit yet).
+                    # Rejoin the current epoch; a real fault will
+                    # re-announce itself as an epoch advance.
+                    return
+                raise F.FabricError(
+                    "recovery window expired mid-rendezvous",
+                    kind="timeout")
+            time.sleep(0.1)
 
     def _process(self, batch: List[_Request]) -> None:
         self._batches += 1

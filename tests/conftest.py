@@ -1,0 +1,36 @@
+"""Harness-level per-test hard timeout.
+
+The chaos suite (``test_fault.py``) exercises deliberately-broken
+collectives; a regression there shows up as a *hang*, not a failure.
+``pytest-timeout`` is not a dependency of this repo, so when
+``REPRO_TEST_TIMEOUT_S`` is set (CI sets it for the multi-device job)
+every test runs under a SIGALRM that turns a wedged test into a loud
+failure.  Unset (the default for local runs), this is a no-op.
+SIGALRM only interrupts the main thread, so child-process reaping in
+``_child.run_procs`` still gets to clean up via its own timeouts.
+"""
+import os
+import signal
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _hard_timeout(request):
+    budget = float(os.environ.get("REPRO_TEST_TIMEOUT_S", "0") or 0)
+    if budget <= 0 or os.name == "nt" or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _expired(signum, frame):
+        raise TimeoutError(
+            f"test exceeded REPRO_TEST_TIMEOUT_S={budget:.0f}s "
+            f"(hung collective?): {request.node.nodeid}")
+
+    old = signal.signal(signal.SIGALRM, _expired)
+    signal.setitimer(signal.ITIMER_REAL, budget)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)
