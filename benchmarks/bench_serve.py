@@ -25,9 +25,17 @@ the device count is locked at jax init):
                    ``gather=False`` launch.  GATED: >= 1.5x, bit-equal.
 * ``cache``     -- resubmitting a UC1 on a hot slice after the mixed run:
                    GATED: zero additional sweep launches.
+* ``load_sweep``-- open-loop paced arrivals at 1x/3x/10x the mixed run's
+                   measured request rate, mixing UC1/UC2/kv_gate over hot
+                   fields against a warm cache.  Per-method p50/p95 (from
+                   ``stats()["methods"]``) land in the JSON per rate.
+                   GATED: worst per-method p95 at 10x stays bounded (the
+                   adaptive micro-batch window must shrink under load
+                   instead of letting queueing delay compound).
 
 Writes machine-readable ``results/BENCH_serve.json`` (throughput, p50/p95
-latency, cache hit rate) so the perf trajectory is tracked across PRs.
+latency, cache hit rate, per-method load-sweep tails) so the perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -51,6 +59,12 @@ DEVICES = 8
 
 MIXED_GATE = 3.0
 FANIN_GATE = 2.0
+LOAD_REQS = 40           # paced requests per load-sweep rate
+LOAD_MULTS = (1, 3, 10)
+# p95 bound at 10x: generous absolute ceiling OR a multiple of the idle
+# p50 -- CI hosts are 2-core, the gate is about tails not compounding
+LOAD_P95_ABS_MS = 1500.0
+LOAD_P95_REL = 20.0
 
 
 def _percentiles(lat_s):
@@ -198,8 +212,63 @@ def _child(out_path: str) -> None:
     fan_equal = all(np.array_equal(a, b)
                     for a, b in zip(fan_res, fan_serial_ref))
 
+    # ---- load sweep: open-loop paced arrivals at 1x/3x/10x ------------
+    base_rps = n_req / coal_s
+    rnd = np.random.default_rng(0)
+    kv_leaves = [np.asarray(rnd.standard_normal((4, 4, 32, 32)), np.float32)
+                 for _ in range(4)]
+    load = {}
+    for mult in LOAD_MULTS:
+        rate = base_rps * mult
+        with SweepService(scfg, mesh=mesh) as svc:
+            svc.warmup([(N, N)], grid_sizes=(len(ebs),), row_buckets=(2,))
+            svc.kv_gate(kv_leaves[:1])               # compile the gate jit
+            coalesced_round(svc, round_targets[0], [])  # warm feature cache
+            futs = []
+            t0 = time.perf_counter()
+            for i in range(LOAD_REQS):
+                target = t0 + i / rate
+                now = time.perf_counter()
+                if target > now:
+                    time.sleep(target - now)
+                x, j = hot[i % 2], i % 5
+                if j < 2:
+                    futs.append(svc.submit_find_eb(
+                        gm, x, round_targets[i % ROUNDS][i % 2]))
+                elif j < 4:
+                    futs.append(svc.submit_best_compressor(uc2, x, eps))
+                else:
+                    futs.append(svc.submit_kv_gate(
+                        [kv_leaves[i % len(kv_leaves)]]))
+            for fut in futs:
+                fut.result(timeout=300)
+            wall = time.perf_counter() - t0
+            st = svc.stats()
+        load[f"{mult}x"] = {
+            "offered_rps": rate,
+            "achieved_rps": LOAD_REQS / wall,
+            "window_ms": st["window_ms"],
+            "window_shrinks": st["window_shrinks"],
+            "launches": st["launches"],
+            "methods": {name: {k: m[k] for k in
+                               ("completed", "rows", "p50_ms", "p95_ms")}
+                        for name, m in st["methods"].items()},
+        }
+    p50_1x = max(m["p50_ms"] for m in load["1x"]["methods"].values())
+    p95_10x = max(m["p95_ms"]
+                  for m in load[f"{LOAD_MULTS[-1]}x"]["methods"].values())
+    load_sweep = {
+        "base_rps": base_rps,
+        "requests_per_rate": LOAD_REQS,
+        "rates": load,
+        "p50_1x_ms": p50_1x,
+        "p95_10x_ms": p95_10x,
+        "p95_10x_limit_ms": max(LOAD_P95_ABS_MS, LOAD_P95_REL * p50_1x),
+    }
+
     with open(out_path, "w") as f:
         json.dump({
+            "load_sweep": load_sweep,
             "mixed": {
                 "requests": n_req,
                 "rounds": ROUNDS,
@@ -268,6 +337,12 @@ def main() -> dict:
     common.emit("serve_fanin_coalesced", fanin["coalesced_s"] * 1e6 / 8,
                 f"speedup={fanin['speedup']:.2f}x launches="
                 f"{fanin['launches']} bitequal={fanin['bitequal']}")
+    ls = res["load_sweep"]
+    common.emit("serve_load_p95_10x", ls["p95_10x_ms"] * 1e3,
+                f"p95@10x={ls['p95_10x_ms']:.1f}ms "
+                f"(limit {ls['p95_10x_limit_ms']:.0f}ms, "
+                f"p50@1x={ls['p50_1x_ms']:.1f}ms, "
+                f"window@10x={ls['rates']['10x']['window_ms']:.3f}ms)")
     common.save_json("BENCH_serve", res)
 
     assert mixed["bitequal"], "coalesced mixed results != serial dispatch"
@@ -278,9 +353,15 @@ def main() -> dict:
         f"coalesced mixed speedup {mixed['speedup']:.2f}x < {MIXED_GATE}x"
     assert fanin["speedup"] >= FANIN_GATE, \
         f"coalesced fan-in speedup {fanin['speedup']:.2f}x < {FANIN_GATE}x"
+    assert ls["p95_10x_ms"] <= ls["p95_10x_limit_ms"], \
+        (f"load sweep: p95 at 10x = {ls['p95_10x_ms']:.1f}ms exceeds "
+         f"{ls['p95_10x_limit_ms']:.0f}ms -- adaptive window failed to "
+         f"keep the tail bounded")
     print(f"# mixed {mixed['speedup']:.2f}x (gate {MIXED_GATE}x), "
           f"fanin {fanin['speedup']:.2f}x (gate {FANIN_GATE}x), "
-          f"cache hit rate {mixed['cache_hit_rate']:.2%} -- OK")
+          f"cache hit rate {mixed['cache_hit_rate']:.2%}, "
+          f"load p95@10x {ls['p95_10x_ms']:.1f}ms "
+          f"(limit {ls['p95_10x_limit_ms']:.0f}ms) -- OK")
     return res
 
 

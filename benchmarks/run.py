@@ -20,7 +20,7 @@ SUITES = [
     ("table4_fig9_3d", "benchmarks.bench_3d"),
     ("table5_prior", "benchmarks.bench_prior"),
     ("fig10_usecases", "benchmarks.bench_usecases"),
-    ("serve_coalescing", "benchmarks.bench_serve"),
+    ("serve_methods_coalescing", "benchmarks.bench_serve"),
     ("multihost_fabric", "benchmarks.bench_multihost"),
     ("fault_recovery", "benchmarks.bench_fault"),
     ("kernels", "benchmarks.bench_kernels"),

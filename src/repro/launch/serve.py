@@ -2,6 +2,12 @@
 
     python -m repro.launch.serve --arch granite-3-2b --smoke \\
         --batch 4 --prompt-len 32 --steps 16 --kv-compress
+
+With ``--kv-gate-service`` the engine's KV-cache gate CRs are served by
+the shared :class:`repro.serve.sweep_service.SweepService` through its
+registered ``kv_gate`` method instead of the engine's private jit --
+concurrent engines coalesce their gate scoring into batched launches and
+repeated KV blocks ride the cross-request cache.
 """
 import argparse
 import time
@@ -24,6 +30,10 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--kv-compress", action="store_true")
+    ap.add_argument("--kv-gate-service", action="store_true",
+                    help="serve KV-gate CR predictions through the "
+                         "shared sweep service (kv_gate method) instead "
+                         "of the engine's private jit")
     ap.add_argument("--mesh", default=None)
     args = ap.parse_args()
 
@@ -31,8 +41,16 @@ def main():
     params = TS.init_state(cfg, jax.random.PRNGKey(0)).params
     scfg = ServeConfig(max_len=args.max_len, kv_compress=args.kv_compress)
 
+    svc = None
+    if args.kv_gate_service:
+        # construct OUTSIDE the (data, model) serving mesh context: the
+        # gate's int8-CR launcher is a plain vmapped jit, and the service
+        # must not capture the token engine's mesh for its own launches
+        from repro.serve.sweep_service import ServiceConfig, SweepService
+        svc = SweepService(ServiceConfig(max_wait_ms=1.0), mesh=None)
+
     def run():
-        eng = Engine(cfg, params, scfg)
+        eng = Engine(cfg, params, scfg, sweep_service=svc)
         batch = {"tokens": jax.random.randint(
             jax.random.PRNGKey(1), (args.batch, args.prompt_len),
             0, cfg.vocab_size, dtype=jnp.int32)}
@@ -46,13 +64,22 @@ def main():
             print(f"KV gate: {eng.kv_saved_bytes:,}/{eng.kv_total_bytes:,} "
                   f"bytes saved")
 
-    if args.mesh:
-        shape = tuple(int(x) for x in args.mesh.split("x"))
-        axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
-        with S.use_mesh(jax.make_mesh(shape, axes)):
+    try:
+        if args.mesh:
+            shape = tuple(int(x) for x in args.mesh.split("x"))
+            axes = ("data", "model") if len(shape) == 2 else ("pod", "data", "model")
+            with S.use_mesh(jax.make_mesh(shape, axes)):
+                run()
+        else:
             run()
-    else:
-        run()
+    finally:
+        if svc is not None:
+            gate = svc.stats()["methods"].get("kv_gate")
+            if gate is not None:
+                print(f"kv_gate service: {gate['completed']} requests, "
+                      f"{gate['rows']} leaves, p50={gate['p50_ms']:.1f}ms "
+                      f"p95={gate['p95_ms']:.1f}ms")
+            svc.close()
 
 
 if __name__ == "__main__":

@@ -67,6 +67,15 @@ def main():
     ap.add_argument("--train-slices", type=int, default=10)
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=3.0)
+    ap.add_argument("--min-wait-ms", type=float, default=0.0,
+                    help="adaptive micro-batch window floor under "
+                         "sustained load")
+    ap.add_argument("--max-live-batches", type=int, default=2,
+                    help="launched-but-not-post-processed batches in "
+                         "flight (admission control)")
+    ap.add_argument("--no-adaptive-window", action="store_true",
+                    help="pin the micro-batch window at --max-wait-ms "
+                         "instead of adapting it to load")
     ap.add_argument("--cache-bytes", type=int, default=4 << 20)
     ap.add_argument("--mesh", default=None,
                     help="'auto' = 1-D all-device sweep mesh")
@@ -146,6 +155,9 @@ def main():
 
     scfg = ServiceConfig(max_batch_slices=args.max_batch,
                          max_wait_ms=args.max_wait_ms,
+                         min_wait_ms=args.min_wait_ms,
+                         adapt_window=not args.no_adaptive_window,
+                         max_live_batches=args.max_live_batches,
                          cache_bytes=args.cache_bytes,
                          launch_timeout_s=args.launch_timeout_s,
                          heartbeat_s=args.heartbeat_s,
@@ -239,7 +251,13 @@ def main():
     total_probes = cache["hits"] + cache["misses"]
     print(f"launches={stats['launches']} rows={stats['rows_launched']} "
           f"pad_rows={stats['pad_rows']} batches={stats['batches']} "
-          f"executables={stats['executables']}")
+          f"executables={stats['executables']} "
+          f"window_ms={stats['window_ms']:.3f} "
+          f"(shrinks={stats['window_shrinks']})")
+    for name, m in sorted(stats["methods"].items()):
+        print(f"method {name}: {m['completed']} done ({m['failed']} "
+              f"failed), {m['rows']} rows, p50={m['p50_ms']:.1f}ms "
+              f"p95={m['p95_ms']:.1f}ms")
     print(f"cache: hit_rate={cache['hits'] / max(total_probes, 1):.2%} "
           f"({cache['hits']}/{total_probes}), entries={cache['entries']}, "
           f"bytes={cache['bytes']}", flush=True)

@@ -1,37 +1,54 @@
-"""Serving layer: the token engine and the paper's sweep service.
+"""Serving layer: the token engine and the servable-method platform.
+
+``repro.serve.method`` / ``repro.serve.registry``
+    The saxml-style workload layer: a :class:`ServableMethod` owns
+    host-side ``pre_process`` (validation + digesting, caller thread), a
+    shared device ``Launcher``, host-side ``post_process`` (completion,
+    post-processing pool), per-method sorted batch-size buckets, and a
+    dummy-data warmup spec.  The default registry serves four methods --
+    ``featurize``, ``find_eb`` (UC1), ``best_compressor`` (UC2) over one
+    shared sweep launcher, plus ``kv_gate`` (the engine's int8-CR gate)
+    -- and a new prediction workload is a registry entry, not a service
+    change.
 
 ``repro.serve.engine``
     Batched prefill/decode engine with the UC2-style KV-cache compression
-    gate (predicted CR decides which KV blocks are stored int8).
+    gate (predicted CR decides which KV blocks are stored int8); with
+    ``sweep_service=`` its gate scoring rides the service's coalesced
+    ``kv_gate`` launches.
 
 Sweep service (``repro.serve.sweep_service``)
-    The production entry point for concurrent featurize/UC1/UC2 traffic.
+    The method-agnostic batching core under every registered method.
     One dispatch per request is the naive serving story; the service
     instead coalesces concurrent requests into single batched launches on
     a persistent mesh:
 
-    * a micro-batching queue (max batch size + max wait deadline) stacks
-      pending requests' slices along the sweep's slice axis and issues ONE
-      ``dist.sweep`` launch with ``gather=False``, scattering the
-      (k, e, 2) result rows back to per-request futures;
-    * a cross-request feature cache (content hash of slice bytes + engine
-      config -> per-eb feature rows, LRU with a byte budget) lets repeated
-      UC1 bisections and UC2 rankings over hot fields skip featurization
-      entirely;
-    * launches are padded to a small set of bucketed batch shapes so a few
-      persistent jitted executables serve every traffic mix without
-      recompiles.
+    * a micro-batching queue (max batch size + load-adaptive wait window)
+      stacks pending requests' rows along the launch batch axis and
+      issues ONE launch per (launcher, shape, config) group, scattering
+      the result rows back to per-request futures on a post-processing
+      pool off the device thread (``max_live_batches`` admission
+      control);
+    * a cross-request feature cache (content hash of row bytes + launch
+      config -> per-eps feature rows, LRU with a byte budget) lets
+      repeated UC1 bisections, UC2 rankings, and KV-gate scores over hot
+      fields skip launching entirely;
+    * launches are padded to the contributing methods' sorted batch
+      buckets so a few persistent jitted executables serve every traffic
+      mix without recompiles (``warmup()`` precompiles every registered
+      method's declared coverage).
 
     Coalesced results are bit-identical to per-request dispatch because
-    the sweep body is row-independent (asserted by
-    ``tests/test_sweep_service.py`` and gated by
-    ``benchmarks/bench_serve.py``).
+    every launcher is row- and per-eps-independent by contract (asserted
+    by ``tests/test_sweep_service.py`` / ``tests/test_methods.py`` and
+    gated by ``benchmarks/bench_serve.py``).
 
     On a process-spanning mesh (``repro.launch.mesh.dist_init`` +
     ``make_sweep_mesh``) the service runs leader/follower: the mesh's
     first process owns the queue and the public API, every other
-    process joins the collective launches via ``serve()``
-    (bit-exactness across the process boundary gated by
-    ``benchmarks/bench_multihost.py``; lifecycle and sizing guidance in
-    ``docs/serving.md``).
+    process joins the collective launches via ``serve()`` -- the launch
+    header carries the launcher's registry wire id, so every method
+    crosses the process boundary through the same protocol
+    (bit-exactness gated by ``benchmarks/bench_multihost.py``; lifecycle
+    and sizing guidance in ``docs/serving.md``).
 """

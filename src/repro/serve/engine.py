@@ -5,6 +5,17 @@ with the in-graph q-ent size model; blocks whose predicted CR clears the
 threshold are stored int8-quantized (quantize-dequantize in the cache,
 metering the saved bytes).  This is the runtime analogue of UC2: decide
 *whether and how* to compress without trial-compressing.
+
+The gate CRs come from one of two places: the engine's private
+``_gate_crs`` jit (default), or -- when constructed with
+``sweep_service=`` -- the shared :class:`repro.serve.sweep_service
+.SweepService` via its registered ``kv_gate`` method, so concurrent
+engines' gate scoring coalesces into the service's batched launches and
+repeats ride its cross-request cache.  Either way the gated leaves are
+re-written by ONE fused quantize-dequantize jit (``_qdq``) -- a single
+dispatch and a single host sync for the whole cache, same style as
+``_gate_crs`` -- with the saved-byte metering computed host-side from the
+block geometry.
 """
 from __future__ import annotations
 
@@ -17,7 +28,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.train.grad_compress import quantize_int8, dequantize_int8, predicted_cr_int8
+from repro.train.grad_compress import (BLOCK, quantize_int8, dequantize_int8,
+                                       predicted_cr_int8)
 
 
 @dataclasses.dataclass
@@ -29,11 +41,12 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params,
-                 scfg: Optional[ServeConfig] = None):
+                 scfg: Optional[ServeConfig] = None, *, sweep_service=None):
         # None sentinel: a dataclass default instance would be shared (and
         # mutated) across every Engine constructed without a config
         scfg = scfg if scfg is not None else ServeConfig()
         self.cfg, self.params, self.scfg = cfg, params, scfg
+        self._svc = sweep_service
         self._prefill = jax.jit(
             lambda p, batch: M.prefill(p, batch, cfg, scfg.max_len))
         self._decode = jax.jit(
@@ -41,8 +54,21 @@ class Engine:
         # all per-leaf gate CRs in ONE device computation, synced once
         self._gate_crs = jax.jit(lambda leaves: jnp.stack(
             [predicted_cr_int8(x.astype(jnp.float32)) for x in leaves]))
+        # quantize-dequantize of ALL gated leaves fused into one jit: one
+        # dispatch + one sync per cache rewrite instead of 2 per leaf
+        self._qdq = jax.jit(lambda leaves: tuple(
+            dequantize_int8(*quantize_int8(x.astype(jnp.float32)),
+                            x.shape, x.dtype)
+            for x in leaves))
         self.kv_saved_bytes = 0
         self.kv_total_bytes = 0
+
+    def _predict_crs(self, leaves: List[Any]) -> np.ndarray:
+        """Predicted int8 CR per leaf: through the shared sweep service's
+        ``kv_gate`` method when one was attached, else the private jit."""
+        if self._svc is not None:
+            return np.asarray(self._svc.submit_kv_gate(leaves).result())
+        return np.asarray(self._gate_crs(tuple(leaves)))
 
     def _maybe_compress_cache(self, cache):
         """Quantize-dequantize K/V leaves whose predicted CR clears the gate."""
@@ -54,15 +80,22 @@ class Engine:
                 if x.dtype in (jnp.bfloat16, jnp.float32) and x.ndim >= 4]
         if not cand:
             return cache
-        crs = np.asarray(self._gate_crs(tuple(leaves[i] for i in cand)))
+        crs = self._predict_crs([leaves[i] for i in cand])
+        gated = []
         for cr, i in zip(crs, cand):
             x = leaves[i]
             self.kv_total_bytes += x.size * x.dtype.itemsize
             if float(cr) >= self.scfg.kv_gate_ratio:
-                codes, scales = quantize_int8(x.astype(jnp.float32))
+                # quantize_int8 pads to BLOCK-sized blocks: nb blocks of
+                # int8 codes plus one f32 scale each, metered host-side
+                nb = -(-x.size // BLOCK)
                 self.kv_saved_bytes += int(
-                    x.size * x.dtype.itemsize - (codes.size + scales.size * 4))
-                leaves[i] = dequantize_int8(codes, scales, x.shape, x.dtype)
+                    x.size * x.dtype.itemsize - (nb * BLOCK + nb * 4))
+                gated.append(i)
+        if gated:
+            rewritten = self._qdq(tuple(leaves[i] for i in gated))
+            for i, leaf in zip(gated, rewritten):
+                leaves[i] = leaf
         return jax.tree.unflatten(tdef, leaves)
 
     def generate(self, batch: Dict[str, jnp.ndarray], steps: int,

@@ -1,0 +1,391 @@
+"""Servable methods: the per-workload layer of the serving platform.
+
+The sweep service used to hardcode exactly three request kinds; every
+new prediction workload meant another bespoke ``submit_*`` path threaded
+through the queue, the cache, and the leader/follower protocol.  This
+module is the saxml-style answer: a :class:`ServableMethod` owns
+everything workload-specific --
+
+* **host-side ``pre_process``** -- argument validation, f32
+  canonicalization and content digesting, run on the CALLER's thread at
+  submit time (never on the device thread, and never inside the
+  coalesced batch where a failure would poison other requests);
+* a **``launcher``** -- the device-launch recipe.  Methods that share a
+  launcher coalesce into the same batched launches (featurize/UC1/UC2
+  all ride :class:`SweepLauncher`, exactly as before the refactor);
+* **host-side ``post_process``** -- turning cached/launched feature rows
+  into the request's result (UC1 bisection, UC2 ranking, ...), run on
+  the service's post-processing pool, off the device thread;
+* **sorted ``batch_buckets``** -- the method's batch-size ladder.
+  ``None`` means the unbounded power-of-two ladder (:func:`_row_bucket`);
+  an explicit sorted tuple pads batches to the smallest covering bucket
+  and falls back to the power-of-two ladder past the largest bucket;
+* a **dummy-data ``warmup_spec``** -- shapes x eps-grid sizes x row
+  buckets the service precompiles so first requests don't pay compile
+  latency.
+
+The batching core (``repro.serve.sweep_service.SweepService``) knows
+nothing about any of them: its queue/launch path handles only
+:class:`MethodRequest` items and launcher ids, so registering a new
+method (``repro.serve.registry``) never touches the core.
+
+Launcher contract
+-----------------
+Every launcher computation MUST be row-independent (a row inside a
+padded, deduplicated batch equals the same row launched alone) and
+per-eps-independent (column ``j`` of an eps union equals that eps
+launched alone).  The core relies on both for coalescing, in-batch
+dedup, eps unioning, cross-request caching, and the row-partitioned
+elastic-recovery transport -- all of which are bit-equal only because
+of these two properties.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import predictors as P
+from repro.core import usecases as UC
+from repro.dist import sweep as DS
+
+_EPS_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
+
+
+def _row_bucket(k: int) -> int:
+    """Smallest power-of-two >= k: row buckets are pow2 so any pow2 mesh
+    extent divides every bucket at or above it (the sharded path never
+    needs a second pad)."""
+    b = 1
+    while b < k:
+        b *= 2
+    return b
+
+
+def _eps_bucket(e: int) -> int:
+    for b in _EPS_BUCKETS:
+        if e <= b:
+            return b
+    return -(-e // 16) * 16
+
+
+def _f32(eps) -> float:
+    """Canonical f32 error-bound key (features are computed in f32)."""
+    return float(np.float32(eps))
+
+
+def slice_digest(x) -> str:
+    """Content hash of a slice's f32 bytes (featurization casts to f32,
+    so a float64 array and its f32 round-trip share cache entries)."""
+    arr = np.ascontiguousarray(np.asarray(x, np.float32))
+    h = hashlib.sha1(arr.tobytes())
+    h.update(str(arr.shape).encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupSpec:
+    """Dummy-data warmup coverage for one method: every (trailing shape,
+    eps-grid size, row bucket) combination is compiled by ``warmup()``."""
+    shapes: Tuple[Tuple[int, ...], ...]
+    grid_sizes: Tuple[int, ...] = (1,)
+    row_buckets: Tuple[int, ...] = (1,)
+
+
+@dataclasses.dataclass
+class Item:
+    """One slice's launch needs within a request."""
+    key: tuple                       # (digest, launch config)
+    x: np.ndarray                    # f32 launch copy, any trailing shape
+    eps_keys: Tuple[float, ...]      # f32 eps keys this request reads
+
+
+@dataclasses.dataclass
+class MethodRequest:
+    """One accepted request, produced by ``ServableMethod.pre_process``
+    and consumed generically by the batching core."""
+    method: "ServableMethod"
+    items: List[Item]
+    future: Future
+    payload: dict
+    t_submit: float
+
+    @property
+    def rows(self) -> int:
+        return len(self.items)
+
+    @property
+    def kind(self) -> str:
+        return self.method.name
+
+
+class Launcher:
+    """Device-launch recipe shared by every method that coalesces with
+    it.  See the module docstring for the row/eps-independence contract.
+    Identity matters: methods registered with the SAME launcher instance
+    batch into the same launches."""
+
+    name = "launcher"
+    row_width = 1                    # trailing feature width R of a row
+    warmup_eps = 1.0                 # dummy eps value for warmup launches
+
+    def launch(self, stack: np.ndarray, epss: np.ndarray, cfg,
+               k_pad: int, mesh):
+        """One padded device launch -> (k_pad, len(epss), row_width)."""
+        raise NotImplementedError
+
+    def gather(self, out) -> np.ndarray:
+        """Bring a launch result to the host (collective gather point on
+        a process-spanning mesh)."""
+        return np.asarray(DS.gather_rows(out))
+
+    def follower_cfg(self, scfg):
+        """The launch config a FOLLOWER compiles against (launches carry
+        no per-request config across the process boundary)."""
+        return None
+
+    def eps_bucket(self, e: int) -> int:
+        return _eps_bucket(e)
+
+
+class SweepLauncher(Launcher):
+    """The paper's featurization sweep: (k, m, n) / (k, d, m, n) stack x
+    (e,) eps vector -> (k, e, 2) feature rows via one persistent-mesh
+    ``dist.sweep.sweep_padded`` launch."""
+
+    name = "sweep"
+    row_width = 2
+
+    def launch(self, stack, epss, cfg, k_pad, mesh):
+        return DS.sweep_padded(stack, epss, cfg, k_pad=k_pad, mesh=mesh)
+
+    def follower_cfg(self, scfg):
+        return scfg.pcfg
+
+
+class Int8CRLauncher(Launcher):
+    """Predicted int8+entropy compression ratio per row (the KV-cache
+    gate's in-graph size model, ``train.grad_compress.predicted_cr_int8``).
+
+    Rows are FLATTENED leaves: the CR is flatten-invariant (the model
+    reshapes to blocks internally), and 1-D rows keep any leaf rank
+    inside the fabric's fixed-size launch header.  The launch is a plain
+    jit -- no mesh collective -- so on a process-spanning fabric leader
+    and followers each compute their broadcast copy locally, which keeps
+    the generic protocol deadlock-free.
+    """
+
+    name = "int8cr"
+    row_width = 1
+    warmup_eps = 0.0
+
+    def __init__(self, bins: int = 4096):
+        self.bins = int(bins)
+        self._fn = None
+
+    @property
+    def cfg_key(self) -> tuple:
+        return ("int8cr", self.bins)
+
+    def launch(self, stack, epss, cfg, k_pad, mesh):
+        import jax
+        from repro.train import grad_compress as GC
+        if self._fn is None:
+            bins = self.bins
+            self._fn = jax.jit(jax.vmap(
+                lambda x: GC.predicted_cr_int8(x, bins)))
+        k = stack.shape[0]
+        if k_pad > k:
+            stack = np.concatenate(
+                [stack, np.broadcast_to(stack[-1:],
+                                        (k_pad - k,) + stack.shape[1:])])
+        crs = np.asarray(self._fn(stack), np.float32)       # (k_pad,)
+        e = int(np.asarray(epss).reshape(-1).shape[0])
+        return np.broadcast_to(
+            crs[:, None, None], (k_pad, e, 1)).copy()
+
+    def follower_cfg(self, scfg):
+        return self.cfg_key
+
+
+class ServableMethod:
+    """Base class for registrable serving methods (module docstring has
+    the full lifecycle).  Subclasses set ``name``, pass a launcher, and
+    implement ``pre_process`` / ``post_process``."""
+
+    name: str = ""
+    batch_buckets: Optional[Tuple[int, ...]] = None
+
+    def __init__(self, launcher: Launcher,
+                 batch_buckets: Optional[Tuple[int, ...]] = None):
+        self.launcher = launcher
+        if batch_buckets is not None:
+            self.batch_buckets = tuple(int(b) for b in batch_buckets)
+        if self.batch_buckets is not None:
+            bb = self.batch_buckets
+            if not bb or list(bb) != sorted(set(bb)) or bb[0] < 1:
+                raise ValueError(
+                    f"method {self.name!r}: batch_buckets must be a "
+                    f"sorted tuple of distinct positive sizes, got {bb}")
+
+    # -- host-side hooks ----------------------------------------------
+
+    def pre_process(self, svc, *args, **kwargs) -> MethodRequest:
+        """Validate + digest a submission on the caller's thread."""
+        raise NotImplementedError
+
+    def post_process(self, req: MethodRequest,
+                     rows_for: Callable[[Item], np.ndarray]):
+        """Complete a request from its feature rows; ``rows_for(item)``
+        returns the (len(eps_keys), row_width) rows for one item."""
+        raise NotImplementedError
+
+    def warmup_spec(self, scfg) -> WarmupSpec:
+        """Dummy-data warmup coverage; override for method traffic."""
+        return WarmupSpec(shapes=((32, 32),), grid_sizes=(1,),
+                          row_buckets=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# The built-in methods (the pre-refactor request kinds + the KV gate)
+# ---------------------------------------------------------------------------
+
+
+class FeaturizeMethod(ServableMethod):
+    """(k, m, n) / (k, d, m, n) stack x (e,) ebs -> (k, e, 2) rows,
+    bit-equal to ``features_sweep(slices, epss)``."""
+
+    name = "featurize"
+
+    def pre_process(self, svc, slices, epss, cfg=None) -> MethodRequest:
+        cfg = svc._check_cfg(cfg if cfg is not None else svc.scfg.pcfg)
+        arr = np.asarray(slices, np.float32)
+        if arr.ndim not in (3, 4):
+            raise ValueError(
+                f"submit_featurize expects (k, m, n) or (k, d, m, n), "
+                f"got {arr.shape}")
+        eps_keys = tuple(_f32(e) for e in np.asarray(epss).reshape(-1))
+        if not eps_keys:
+            raise ValueError("submit_featurize needs at least one eb")
+        items = [Item((slice_digest(s), cfg), s, eps_keys) for s in arr]
+        return MethodRequest(self, items, Future(),
+                             {"eps_keys": eps_keys}, time.perf_counter())
+
+    def post_process(self, req, rows_for):
+        return np.stack([rows_for(it) for it in req.items])
+
+
+class FindEbMethod(ServableMethod):
+    """UC1: (eps, predicted_cr) hitting a target CR, bit-equal to
+    ``usecases.find_error_bound_for_cr`` -- the grid featurization comes
+    from the shared launch / cross-request cache."""
+
+    name = "find_eb"
+
+    def pre_process(self, svc, grid_model, data, target_cr,
+                    tol: float = 0.02, max_iters: int = 32) -> MethodRequest:
+        cfg = svc._check_cfg(grid_model.cfg)
+        x = np.asarray(data, np.float32)
+        if x.ndim != grid_model.ndim:
+            # validate at submit time: a worker-side failure would poison
+            # the whole coalesced batch, not just this request
+            raise ValueError(
+                f"submit_find_eb: grid model '{grid_model.name}' was "
+                f"trained on {grid_model.ndim}-D data, got {x.shape}")
+        eps_keys = tuple(_f32(e) for e in np.asarray(grid_model.ebs))
+        item = Item((slice_digest(x), cfg), x, eps_keys)
+        return MethodRequest(
+            self, [item], Future(),
+            {"grid_model": grid_model, "data": data,
+             "target_cr": target_cr, "tol": tol, "max_iters": max_iters},
+            time.perf_counter())
+
+    def post_process(self, req, rows_for):
+        gm = req.payload["grid_model"]
+        feats = rows_for(req.items[0])                      # (e, 2)
+        feat_cache = P.get_engine(gm.cfg).cached(
+            req.payload["data"], features=feats, epss=gm.ebs)
+        return UC.find_error_bound_for_cr(
+            gm, req.payload["data"], req.payload["target_cr"],
+            tol=req.payload["tol"], max_iters=req.payload["max_iters"],
+            feat_cache=feat_cache)
+
+
+class BestCompressorMethod(ServableMethod):
+    """UC2: (best_name, preds) at an error bound, bit-equal to
+    ``usecases.best_compressor``."""
+
+    name = "best_compressor"
+
+    def pre_process(self, svc, models: Dict[str, Any], data,
+                    eps) -> MethodRequest:
+        if not models:
+            raise ValueError("submit_best_compressor needs trained models")
+        cfg = svc._check_cfg(next(iter(models.values())).cfg)
+        ndims = {m.ndim for m in models.values()}
+        x = np.asarray(data, np.float32)
+        if len(ndims) > 1 or x.ndim != next(iter(ndims)):
+            raise ValueError(
+                f"submit_best_compressor: models trained on "
+                f"{sorted(ndims)}-D data must all match the request rank, "
+                f"got {x.shape}")
+        item = Item((slice_digest(x), cfg), x, (_f32(eps),))
+        return MethodRequest(
+            self, [item], Future(),
+            {"models": models, "data": data, "eps": eps},
+            time.perf_counter())
+
+    def post_process(self, req, rows_for):
+        feats = rows_for(req.items[0])                      # (1, 2)
+        return UC.best_compressor(
+            req.payload["models"], req.payload["data"],
+            req.payload["eps"], feats=feats)
+
+
+class KVGateMethod(ServableMethod):
+    """KV-cache compression gate: a list of array leaves -> (k,) f32
+    predicted int8 CRs, one per leaf, matching the serving engine's
+    in-graph ``predicted_cr_int8`` size model.
+
+    Leaves are flattened (CR is flatten-invariant) and digested like any
+    other row, so identical KV blocks dedup within a batch and repeats
+    can ride the cross-request cache under the standard admission
+    policy.  There is no error bound; rows key on the sentinel eps 0.0.
+    """
+
+    name = "kv_gate"
+    batch_buckets = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+    EPS_KEY = 0.0
+
+    def __init__(self, launcher: Optional[Int8CRLauncher] = None,
+                 batch_buckets=None):
+        super().__init__(launcher if launcher is not None
+                         else Int8CRLauncher(), batch_buckets)
+
+    def pre_process(self, svc, leaves) -> MethodRequest:
+        leaves = list(leaves)
+        if not leaves:
+            raise ValueError("submit_kv_gate needs at least one leaf")
+        cfg_key = self.launcher.cfg_key
+        items = []
+        for leaf in leaves:
+            arr = np.ascontiguousarray(
+                np.asarray(leaf, np.float32).reshape(-1))
+            if arr.size == 0:
+                raise ValueError("submit_kv_gate: empty leaf")
+            items.append(Item((slice_digest(arr), cfg_key), arr,
+                              (self.EPS_KEY,)))
+        return MethodRequest(self, items, Future(), {},
+                             time.perf_counter())
+
+    def post_process(self, req, rows_for):
+        return np.asarray([rows_for(it)[0, 0] for it in req.items],
+                          np.float32)
+
+    def warmup_spec(self, scfg) -> WarmupSpec:
+        return WarmupSpec(shapes=((256,),), grid_sizes=(1,),
+                          row_buckets=(1, 2))

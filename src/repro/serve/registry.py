@@ -1,0 +1,80 @@
+"""Method registry: names -> servable methods, launchers -> wire ids.
+
+The registry is the only place the serving platform learns what it can
+serve.  ``SweepService`` takes one at construction (defaulting to
+:func:`default_registry`) and routes every ``submit(name, ...)`` through
+it; the queue/launch core itself contains zero method-specific branches.
+
+Launcher wire ids
+-----------------
+Each distinct :class:`~repro.serve.method.Launcher` instance gets a
+small integer id in REGISTRATION ORDER.  The id travels in the
+leader/follower launch header (and the recovered fabric's KV launch
+descriptors), so every process of a multi-process service must build
+its registry with the same methods in the same order -- the same
+lockstep-construction rule the collective fabric already imposes on
+``ServiceConfig``.  The default registry satisfies it by construction.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.serve.method import (BestCompressorMethod, FeaturizeMethod,
+                                FindEbMethod, KVGateMethod, Launcher,
+                                ServableMethod, SweepLauncher)
+
+
+class MethodRegistry:
+    """Name -> :class:`ServableMethod` map plus the launcher id space."""
+
+    def __init__(self):
+        self._methods: "Dict[str, ServableMethod]" = {}
+        self._launchers: List[Launcher] = []
+
+    def register(self, method: ServableMethod) -> ServableMethod:
+        if not method.name:
+            raise ValueError("servable method needs a non-empty name")
+        if method.name in self._methods:
+            raise ValueError(
+                f"method {method.name!r} is already registered")
+        if method.launcher not in self._launchers:
+            self._launchers.append(method.launcher)
+        self._methods[method.name] = method
+        return method
+
+    def get(self, name: str) -> ServableMethod:
+        try:
+            return self._methods[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown servable method {name!r}; registered: "
+                f"{sorted(self._methods)}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._methods
+
+    def methods(self) -> Tuple[ServableMethod, ...]:
+        return tuple(self._methods.values())
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._methods)
+
+    def launcher_id(self, launcher: Launcher) -> int:
+        return self._launchers.index(launcher)
+
+    def launcher(self, gid: int) -> Launcher:
+        return self._launchers[int(gid)]
+
+
+def default_registry() -> MethodRegistry:
+    """The built-in platform: the paper's three request kinds over one
+    shared sweep launcher, plus the serving engine's KV-cache gate.
+    A fresh instance per call -- services never share mutable registry
+    state."""
+    reg = MethodRegistry()
+    sweep = SweepLauncher()
+    reg.register(FeaturizeMethod(sweep))
+    reg.register(FindEbMethod(sweep))
+    reg.register(BestCompressorMethod(sweep))
+    reg.register(KVGateMethod())
+    return reg

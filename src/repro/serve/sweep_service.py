@@ -1,4 +1,14 @@
-"""Request-coalescing sweep service: micro-batching + cross-request cache.
+"""Method-agnostic serving core: micro-batching + cache + launch fabric.
+
+This module is the batching half of the servable-method platform.  The
+workload half lives in ``repro.serve.method`` (ServableMethod: host-side
+``pre_process``, a shared device ``Launcher``, host-side
+``post_process``, per-method sorted batch buckets, dummy-data warmup
+specs) and ``repro.serve.registry`` (name -> method).  ``SweepService``
+itself knows nothing about featurize/UC1/UC2/KV-gating: its queue,
+cache, launch, and leader/follower paths handle only
+:class:`~repro.serve.method.MethodRequest` items and launcher wire ids,
+so a new prediction workload is a registry entry, not a service change.
 
 The serving gap this closes: ``find_error_bound_for_cr`` (UC1) and
 ``best_compressor`` (UC2) each pay one full featurization dispatch per
@@ -6,38 +16,70 @@ request, and under a mesh each request triggers its own ``shard_map``
 launch.  The paper's speedups assume featurization cost is *amortized*
 across queries, so the service batches the amortization in three layers:
 
-1. **Micro-batching queue** -- concurrent ``submit_*`` calls enqueue; a
-   single worker thread flushes when the pending row count reaches
-   ``max_batch_slices`` or the oldest request has waited ``max_wait_ms``.
-   Every flushed batch becomes ONE ``dist.sweep.sweep_padded`` launch per
-   (slice shape, engine config) group -- shapes are arbitrary trailing
-   shapes, so (d, m, n) volume requests coalesce alongside (m, n) slice
-   requests -- ``gather=False`` on the persistent mesh, so devices keep
-   their shards until the single scatter-back transfer -- and the
-   (k, e, 2) rows are scattered to the per-request futures.
+1. **Micro-batching queue** -- concurrent ``submit*`` calls enqueue
+   pre-processed requests; a single worker thread flushes when the
+   pending row count reaches ``max_batch_slices`` or the oldest request
+   has waited the current micro-batch window.  Every flushed batch
+   becomes ONE launch per (launcher, trailing shape, launch config)
+   group -- methods sharing a launcher coalesce across method
+   boundaries -- and the result rows are scattered to the per-request
+   futures by the post-processing pool, off the device thread.
 
-2. **Cross-request feature cache** -- content hash of the f32 slice bytes
-   + engine config -> per-error-bound feature rows, LRU with a byte
+2. **Cross-request feature cache** -- content hash of the row's f32
+   bytes + launch config -> per-eps-key feature rows, LRU with a byte
    budget.  A repeated UC1 bisection or UC2 ranking over a hot field is
-   served from the cache with ZERO sweep launches.  Within one batch,
-   requests for the same slice are deduplicated before launch and their
-   error-bound grids are unioned into one eps vector (per-eps results are
-   independent, so the union launch is bit-equal to separate ones).
+   served from the cache with ZERO launches.  Within one batch, rows for
+   the same digest are deduplicated before launch and their eps grids
+   are unioned into one eps vector (rows are per-eps independent, so the
+   union launch is bit-equal to separate ones).
 
-3. **Persistent bucketed executables** -- batches are padded to
-   power-of-two row buckets and a small set of eps-vector lengths, so the
-   jitted sweep executables (keyed by mesh + padded batch shape) are
+3. **Persistent bucketed executables** -- batches are padded to the
+   contributing methods' sorted batch-size buckets (power-of-two by
+   default) and a small set of eps-vector lengths, so the jitted
+   executables (keyed by launcher + mesh + padded batch shape) are
    compiled once per bucket and reused for every traffic mix.
+   ``warmup()`` with no arguments precompiles every registered method's
+   ``warmup_spec`` buckets.
 
-Results are bit-identical to per-request serial dispatch: the sweep body
-is row-independent and per-eps-independent, UC1 bisection runs the exact
-``usecases`` code on a seeded ``SliceCache``, and UC2 ranking feeds the
-shared rows through the exact ``best_compressor`` model evaluation.
+Results are bit-identical to per-request serial dispatch: launchers are
+row-independent and per-eps-independent by contract, UC1 bisection runs
+the exact ``usecases`` code on a seeded ``SliceCache``, and UC2 ranking
+feeds the shared rows through the exact ``best_compressor`` model
+evaluation.
 
-Cache admission: one-shot cold fields are NOT cached.  A slice's rows are
-admitted only once its content hash has been sighted by
+Adaptive micro-batch window
+---------------------------
+The flush deadline is load-aware (``adapt_window``, on by default): a
+flush that found the queue saturated (the row cap tripped, or rows were
+still pending afterwards) HALVES the window toward ``min_wait_ms`` --
+under sustained depth there is no point waiting for companions that are
+already queued -- while an idle deadline flush grows it back toward the
+configured ``max_wait_ms`` ceiling.  ``max_wait_ms`` is therefore the
+ceiling a lone request can ever wait, so latency-sensitive idle traffic
+is unaffected; only saturated traffic trades the wait for immediate
+launches.  ``stats()["window_ms"]`` exposes the live window.
+
+Admission control
+-----------------
+Two bounds keep an overloaded service from queueing unboundedly:
+
+* ``max_queue_rows`` -- ``submit*`` raises :class:`RetryAfter` instead
+  of enqueueing when the fabric falls behind.  The backoff hint is
+  load-proportional: pending rows divided by the recent drain rate
+  (EMA of rows/s over completed batches), floored at the current
+  micro-batch window, so clients under 10x load back off realistically
+  instead of hammering at a fixed interval.
+* ``max_live_batches`` -- at most this many flushed batches may be in
+  flight (launched but not yet post-processed).  Pre-processing runs on
+  the caller's thread at submit time and post-processing on a small
+  pool, so the device thread does nothing but launch; the live-batch
+  bound keeps that pipeline from racing arbitrarily far ahead of the
+  host-side completion work.
+
+Cache admission: one-shot cold fields are NOT cached.  A digest's rows
+are admitted only once its content hash has been sighted by
 ``cache_admit_after`` distinct requests (default 2) -- concurrent
-requests for the same slice inside one batch count individually, so a
+requests for the same digest inside one batch count individually, so a
 hot field entering with simultaneous UC1+UC2 traffic is admitted on its
 very first launch, while a scan over thousands of distinct cold slices
 never evicts the working set.
@@ -47,16 +89,18 @@ Multi-process leader/follower mode
 Constructed on a PROCESS-SPANNING mesh (``repro.launch.mesh.dist_init``
 + ``make_sweep_mesh``), the service splits roles: the mesh's first
 process is the **leader** -- it owns the micro-batching queue, the
-cache, and the public ``submit_*`` API -- and every other process is a
+cache, and the public ``submit*`` API -- and every other process is a
 **follower** that blocks in :meth:`serve` joining each collective
 launch.  Per launch the leader broadcasts a fixed-size header (batch
-rows, trailing shape, eps length, ``k_pad``) and then the slice stack +
-eps union (``multihost_utils.broadcast_one_to_all``); both sides enter
-the same ``dist.sweep.sweep_padded`` collective, and the scatter-back
-all-gather is the single synchronization point.  ``close()`` on the
-leader drains the queue and broadcasts a shutdown header that releases
-the followers.  All processes must construct the service with the same
-``ServiceConfig`` (the engine config is not re-broadcast per launch).
+rows, trailing shape, eps length, ``k_pad``, launcher wire id) and then
+the row stack + eps union (``multihost_utils.broadcast_one_to_all``);
+both sides enter the same launcher computation, and the scatter-back
+gather is the single synchronization point.  ``close()`` on the leader
+drains the queue and broadcasts a shutdown header that releases the
+followers.  All processes must construct the service with the same
+``ServiceConfig`` AND the same method registry (launcher ids are
+assigned in registration order; the engine config is not re-broadcast
+per launch).
 
 Elastic fault tolerance
 -----------------------
@@ -74,17 +118,17 @@ heartbeats, SHRINKS the mesh to the surviving processes
 (``fault.surviving_submesh``), bumps the fabric *epoch*, invalidates
 every executable compiled for the old mesh, and relaunches the
 in-flight batch -- pending futures complete bit-equal on the shrunken
-mesh (the sweep is row/eps independent, so the result does not depend
+mesh (launchers are row/eps independent, so the result does not depend
 on which devices computed it).  Post-recovery launches move off gloo
 entirely: a faulted gloo collective leaves stale pair connections that
 poison every later cross-process device collective in the cohort, so
 the recovered transport partitions each batch's rows across the
 survivors (contiguous blocks, proportional to their device share of
-the ``fault.surviving_submesh``), every process sweeps its block
-locally -- unsharded, since the poisoned gloo state breaks even
-process-local multi-device collectives -- and the row blocks travel
-back through the coordination-service KV store, so no device
-collective of any kind runs again on that fabric.
+the ``fault.surviving_submesh``), every process runs its block's
+launcher computation locally -- unsharded, since the poisoned gloo
+state breaks even process-local multi-device collectives -- and the
+row blocks travel back through the coordination-service KV store, so
+no device collective of any kind runs again on that fabric.
 Shrunk to one process, the leader degrades to the single-process path
 and keeps serving.  Followers mirror the epoch state machine: a
 follower that faults rejoins the published epoch at a bounded barrier,
@@ -93,9 +137,7 @@ learns it was evicted (:class:`repro.dist.fault.FabricError` with
 (``kind="leader_lost"``) instead of blocking forever.  Fabric-scoped
 failures fail ALL pending futures with the typed ``FabricError`` and
 release :meth:`serve`; request-scoped failures still fail only their
-batch.  Admission control: with ``max_queue_rows`` set, ``submit_*``
-raises :class:`RetryAfter` (carrying a backoff estimate) instead of
-queueing unboundedly when the fabric falls behind.
+batch.
 
 Usage::
 
@@ -104,6 +146,7 @@ Usage::
         f1 = svc.submit_find_eb(grid_model, slice_a, target_cr=8.0)
         f2 = svc.submit_best_compressor(models, slice_b, eps)
         f3 = svc.submit_featurize(stack, ebs)
+        f4 = svc.submit_kv_gate(kv_leaves)         # = svc.submit("kv_gate", ...)
         eps, cr = f1.result()
 
     # multi-process: leader (process 0) runs the block above; followers:
@@ -114,21 +157,22 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import hashlib
 import itertools
 import json
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import predictors as P
-from repro.core import usecases as UC
 from repro.dist import fault as F
 from repro.dist import faultinject as FI
 from repro.dist import sweep as DS
+from repro.serve.method import (Item, Launcher, MethodRequest, ServableMethod,
+                                _eps_bucket, _f32, _row_bucket, slice_digest)
+from repro.serve.registry import MethodRegistry, default_registry
 
 try:                                  # runtime/collective failure type
     from jax._src.lib import xla_client as _xc
@@ -137,52 +181,22 @@ except Exception:                     # pragma: no cover - very old jax
     _XLA_ERRORS = ()
 
 
-_EPS_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
-
 # multi-process services in one program take KV-namespace numbers from a
 # process-local counter: lockstep construction order is already required
 # by the collective fabric, so the counters agree across processes and a
 # second service never reads the first one's shutdown/epoch keys
 _FABRIC_COUNTER = itertools.count()
 
-
-def _row_bucket(k: int) -> int:
-    """Smallest power-of-two >= k: row buckets are pow2 so any pow2 mesh
-    extent divides every bucket at or above it (the sharded path never
-    needs a second pad)."""
-    b = 1
-    while b < k:
-        b *= 2
-    return b
-
-
-def _eps_bucket(e: int) -> int:
-    for b in _EPS_BUCKETS:
-        if e <= b:
-            return b
-    return -(-e // 16) * 16
-
-
-def _f32(eps) -> float:
-    """Canonical f32 error-bound key (features are computed in f32)."""
-    return float(np.float32(eps))
-
-
-def slice_digest(x) -> str:
-    """Content hash of a slice's f32 bytes (featurization casts to f32,
-    so a float64 array and its f32 round-trip share cache entries)."""
-    arr = np.ascontiguousarray(np.asarray(x, np.float32))
-    h = hashlib.sha1(arr.tobytes())
-    h.update(str(arr.shape).encode())
-    return h.hexdigest()
+_LAT_RING = 512                       # per-method latency samples kept
 
 
 class RetryAfter(RuntimeError):
     """Backpressure rejection: the service's bounded request queue is
     full (``ServiceConfig.max_queue_rows``).  ``retry_after_s`` is the
-    service's estimate of when capacity frees up (one batch's worth of
-    drain time); ``pending_rows`` is the queue depth that triggered the
-    rejection.  Raised from ``submit_*`` -- nothing was enqueued."""
+    service's load-proportional backoff hint (pending rows over the
+    recent drain rate, floored at the micro-batch window);
+    ``pending_rows`` is the queue depth that triggered the rejection.
+    Raised from ``submit*`` -- nothing was enqueued."""
 
     def __init__(self, message: str, *, retry_after_s: float,
                  pending_rows: int):
@@ -222,7 +236,11 @@ class _Boxed:
 @dataclasses.dataclass(frozen=True)
 class ServiceConfig:
     max_batch_slices: int = 64       # flush when this many rows are pending
-    max_wait_ms: float = 2.0         # ... or the oldest request waited this
+    max_wait_ms: float = 2.0         # micro-batch window CEILING (idle value)
+    min_wait_ms: float = 0.0         # adaptive window floor under load
+    adapt_window: bool = True        # load-aware window (see module docs)
+    max_live_batches: int = 2        # launched-but-not-post-processed bound
+    post_workers: int = 2            # host-side post-processing pool size
     cache_bytes: int = 4 << 20       # cross-request feature-cache budget
     max_eps_per_launch: int = 32     # chunk wider eps unions across launches
     cache_admit_after: int = 2       # sightings before a digest is cached
@@ -235,8 +253,11 @@ class ServiceConfig:
 
 
 class FeatureCache:
-    """Cross-request feature cache: (slice digest, engine config) ->
-    {f32 eb -> (2,) feature row}, LRU over slices with a byte budget.
+    """Cross-request feature cache: (row digest, launch config) ->
+    {f32 eps key -> feature row}, LRU over digests with a byte budget.
+    Rows are small f32 vectors whose width is the launcher's
+    ``row_width`` (2 for the sweep, 1 for the int8-CR gate); accounting
+    uses each row's actual ``nbytes``.
 
     Admission policy: a digest's rows are stored only once it has been
     *sighted* (``record_sighting``, one count per request touching the
@@ -248,7 +269,7 @@ class FeatureCache:
     bytes per cold field, never row data.
     """
 
-    ROW_BYTES = 2 * 4
+    ROW_BYTES = 2 * 4                # sweep-row estimate (sizing docs/tests)
     ENTRY_OVERHEAD = 128             # digest + dict bookkeeping estimate
 
     def __init__(self, max_bytes: int, admit_after: int = 1,
@@ -291,7 +312,7 @@ class FeatureCache:
             return ent[eps_key]
 
     def put(self, key: tuple, eps_key: float, row: np.ndarray) -> bool:
-        """Store one (digest, eb) row; returns False when the admission
+        """Store one (digest, eps) row; returns False when the admission
         policy rejects the (cold, under-sighted) digest."""
         with self._lock:
             ent = self._entries.get(key)
@@ -303,15 +324,16 @@ class FeatureCache:
                 self._seen.pop(key, None)
                 ent = self._entries[key] = {}
                 self._bytes += self.ENTRY_OVERHEAD
-            if eps_key not in ent:
-                self._bytes += self.ROW_BYTES
+            old = ent.get(eps_key)
+            self._bytes += row.nbytes - (0 if old is None else old.nbytes)
             ent[eps_key] = row
             self._entries.move_to_end(key)
             # never evict the slice just written: it may still be needed
             # to complete the in-flight batch
             while self._bytes > self.max_bytes and len(self._entries) > 1:
-                _, old = self._entries.popitem(last=False)
-                self._bytes -= self.ENTRY_OVERHEAD + self.ROW_BYTES * len(old)
+                _, dropped = self._entries.popitem(last=False)
+                self._bytes -= self.ENTRY_OVERHEAD + sum(
+                    r.nbytes for r in dropped.values())
                 self.evictions += 1
             return True
 
@@ -331,30 +353,10 @@ class FeatureCache:
                     "pending_sightings": len(self._seen)}
 
 
-@dataclasses.dataclass
-class _Item:
-    """One slice's launch needs within a request."""
-    key: tuple                       # (digest, engine config)
-    x: np.ndarray                    # (m, n) / (d, m, n) f32 launch copy
-    eps_keys: Tuple[float, ...]      # f32 ebs this request reads
-
-
-@dataclasses.dataclass
-class _Request:
-    kind: str                        # featurize | find_eb | best_compressor
-    items: List[_Item]
-    future: Future
-    payload: dict
-    t_submit: float
-
-    @property
-    def rows(self) -> int:
-        return len(self.items)
-
-
 class SweepService:
-    """Coalesces concurrent featurize/UC1/UC2 requests into single batched
-    launches on a persistent mesh (module docstring has the full story).
+    """Coalesces concurrent requests of every registered servable method
+    into single batched launches on a persistent mesh (module docstring
+    has the full story).
 
     The mesh is captured at construction (explicit ``mesh=`` argument or
     the thread's active ``dist.sharding.use_mesh``) and reused for every
@@ -364,15 +366,18 @@ class SweepService:
     fabric; ``self._mesh0`` keeps the construction-time one).
     """
 
-    HDR_LEN = 8                      # [op, k, k_pad, rank, t0, t1, t2, e_pad]
+    HDR_LEN = 9                 # [op, k, k_pad, rank, t0, t1, t2, e_pad, gid]
     OP_SHUTDOWN, OP_LAUNCH = 0, 1
 
-    def __init__(self, scfg: Optional[ServiceConfig] = None, *, mesh=None):
+    def __init__(self, scfg: Optional[ServiceConfig] = None, *, mesh=None,
+                 registry: Optional[MethodRegistry] = None):
         self.scfg = scfg if scfg is not None else ServiceConfig()
+        self.registry = registry if registry is not None else \
+            default_registry()
         self.mesh = DS.active_sweep_mesh(mesh)
         self.cache = FeatureCache(self.scfg.cache_bytes,
                                   admit_after=self.scfg.cache_admit_after)
-        self._queue: "collections.deque[_Request]" = collections.deque()
+        self._queue: "collections.deque[MethodRequest]" = collections.deque()
         self._cond = threading.Condition()
         self._stop = False
         self._closed = False
@@ -381,8 +386,22 @@ class SweepService:
         self._pad_rows = 0
         self._batches = 0
         self._requests = collections.Counter()
-        self._executables: set = set()   # (mesh key, k_pad, m, n, e_pad, cfg)
+        self._executables: set = set()   # (mesh, launcher, k_pad, shape, ...)
         self._fabric_error: Optional[BaseException] = None
+        # adaptive micro-batch window (module docstring): starts at the
+        # ceiling, halves on loaded flushes, grows back when idle
+        self._window_ms = float(self.scfg.max_wait_ms)
+        self._window_shrinks = 0
+        self._window_grows = 0
+        # admission-control + host-side completion pipeline
+        self._live = threading.Semaphore(max(1, self.scfg.max_live_batches))
+        self._live_now = 0
+        self._post = ThreadPoolExecutor(
+            max_workers=max(1, self.scfg.post_workers),
+            thread_name_prefix="sweep-post")
+        # per-method latency/throughput counters (stats()["methods"])
+        self._mlock = threading.Lock()
+        self._mstats: Dict[str, dict] = {}
         # leader/follower roles on a process-spanning mesh: the mesh's
         # first process owns the queue, everyone else joins collectives
         self._multiproc = DS.mesh_spans_processes(self.mesh)
@@ -394,6 +413,7 @@ class SweepService:
         self._last_recovery_s = 0.0
         self._rejected = 0
         self._ema_batch_s = 0.0      # drain-time estimate for RetryAfter
+        self._ema_rows_per_s = 0.0   # drain-rate estimate for RetryAfter
         if self._multiproc:
             import jax
             self._me = jax.process_index()
@@ -461,6 +481,16 @@ class SweepService:
                 "are a single-process feature")
         return cfg
 
+    def submit(self, method: str, *args, **kwargs) -> Future:
+        """Submit to any registered method by name.  The method's
+        ``pre_process`` (validation + digesting) runs on the CALLER's
+        thread; the returned Future resolves to the method's
+        ``post_process`` result."""
+        req = self.registry.get(method).pre_process(self, *args, **kwargs)
+        return self._submit(req)
+
+    # built-in method conveniences -------------------------------------
+
     def submit_featurize(self, slices, epss,
                          cfg: Optional[P.PredictorConfig] = None) -> Future:
         """(k, m, n) slice stack or (k, d, m, n) volume stack x (e,) ebs
@@ -468,59 +498,26 @@ class SweepService:
         ``features_sweep(slices, epss)``.  Batching/digests are keyed by
         the trailing shape, so volume requests coalesce with each other
         exactly like slice requests do."""
-        cfg = self._check_cfg(cfg if cfg is not None else self.scfg.pcfg)
-        arr = np.asarray(slices, np.float32)
-        if arr.ndim not in (3, 4):
-            raise ValueError(
-                f"submit_featurize expects (k, m, n) or (k, d, m, n), "
-                f"got {arr.shape}")
-        eps_keys = tuple(_f32(e) for e in np.asarray(epss).reshape(-1))
-        if not eps_keys:
-            raise ValueError("submit_featurize needs at least one eb")
-        items = [_Item((slice_digest(s), cfg), s, eps_keys) for s in arr]
-        return self._submit(_Request(
-            "featurize", items, Future(),
-            {"eps_keys": eps_keys}, time.perf_counter()))
+        return self.submit("featurize", slices, epss, cfg)
 
     def submit_find_eb(self, grid_model, data, target_cr: float,
                        tol: float = 0.02, max_iters: int = 32) -> Future:
         """UC1 through the service: Future[(eps, predicted_cr)], bit-equal
         to ``usecases.find_error_bound_for_cr``.  The grid featurization
         comes from the shared launch / cross-request cache."""
-        cfg = self._check_cfg(grid_model.cfg)
-        x = np.asarray(data, np.float32)
-        if x.ndim != grid_model.ndim:
-            # validate at submit time: a worker-side failure would poison
-            # the whole coalesced batch, not just this request
-            raise ValueError(
-                f"submit_find_eb: grid model '{grid_model.name}' was "
-                f"trained on {grid_model.ndim}-D data, got {x.shape}")
-        eps_keys = tuple(_f32(e) for e in np.asarray(grid_model.ebs))
-        item = _Item((slice_digest(x), cfg), x, eps_keys)
-        return self._submit(_Request(
-            "find_eb", [item], Future(),
-            {"grid_model": grid_model, "data": data, "target_cr": target_cr,
-             "tol": tol, "max_iters": max_iters}, time.perf_counter()))
+        return self.submit("find_eb", grid_model, data, target_cr,
+                           tol=tol, max_iters=max_iters)
 
     def submit_best_compressor(self, models: Dict[str, object], data,
                                eps: float) -> Future:
         """UC2 through the service: Future[(best_name, preds)], bit-equal
         to ``usecases.best_compressor``."""
-        if not models:
-            raise ValueError("submit_best_compressor needs trained models")
-        cfg = self._check_cfg(next(iter(models.values())).cfg)
-        ndims = {m.ndim for m in models.values()}
-        x = np.asarray(data, np.float32)
-        if len(ndims) > 1 or x.ndim != next(iter(ndims)):
-            raise ValueError(
-                f"submit_best_compressor: models trained on "
-                f"{sorted(ndims)}-D data must all match the request rank, "
-                f"got {x.shape}")
-        item = _Item((slice_digest(x), cfg), x, (_f32(eps),))
-        return self._submit(_Request(
-            "best_compressor", [item], Future(),
-            {"models": models, "data": data, "eps": eps},
-            time.perf_counter()))
+        return self.submit("best_compressor", models, data, eps)
+
+    def submit_kv_gate(self, leaves) -> Future:
+        """KV-cache gate: list of array leaves -> Future[(k,) f32
+        predicted int8 CRs], matching ``predicted_cr_int8`` per leaf."""
+        return self.submit("kv_gate", leaves)
 
     # sync conveniences ------------------------------------------------
 
@@ -533,7 +530,31 @@ class SweepService:
     def best_compressor(self, models, data, eps) -> tuple:
         return self.submit_best_compressor(models, data, eps).result()
 
+    def kv_gate(self, leaves) -> np.ndarray:
+        return self.submit_kv_gate(leaves).result()
+
     def stats(self) -> dict:
+        with self._cond:
+            queue_rows = sum(r.rows for r in self._queue)
+            pending: collections.Counter = collections.Counter()
+            for r in self._queue:
+                pending[r.kind] += r.rows
+        with self._mlock:
+            methods = {}
+            for name, st in self._mstats.items():
+                lat = np.asarray(st["lat"], np.float64)
+                methods[name] = {
+                    "completed": st["completed"],
+                    "failed": st["failed"],
+                    "rows": st["rows"],
+                    "pending_rows": int(pending.get(name, 0)),
+                    "p50_ms": (float(np.percentile(lat, 50))
+                               if lat.size else 0.0),
+                    "p95_ms": (float(np.percentile(lat, 95))
+                               if lat.size else 0.0),
+                    "mean_ms": float(lat.mean()) if lat.size else 0.0,
+                }
+            live = self._live_now
         return {"role": self.role,
                 "launches": self._launches,
                 "rows_launched": self._rows_launched,
@@ -541,6 +562,12 @@ class SweepService:
                 "batches": self._batches,
                 "executables": len(self._executables),
                 "requests": dict(self._requests),
+                "methods": methods,
+                "queue_rows": queue_rows,
+                "window_ms": self._window_ms,
+                "window_shrinks": self._window_shrinks,
+                "window_grows": self._window_grows,
+                "live_batches": live,
                 "epoch": self._epoch,
                 "transport": self._transport,
                 "recoveries": self._recoveries,
@@ -553,14 +580,22 @@ class SweepService:
     def launches(self) -> int:
         return self._launches
 
-    def warmup(self, shapes: Sequence[Tuple[int, ...]],
+    def warmup(self, shapes: Optional[Sequence[Tuple[int, ...]]] = None,
                grid_sizes: Sequence[int] = (1,),
                row_buckets: Sequence[int] = (1,),
                cfg: Optional[P.PredictorConfig] = None) -> None:
         """Pre-compile the bucketed executables for the expected traffic
-        (slice (m, n) / volume (d, m, n) shapes x eps-grid sizes x row
-        buckets) so first requests don't pay compile latency.  On a
-        process-spanning mesh the leader's warmup launches ride the
+        so first requests don't pay compile latency.
+
+        With explicit ``shapes`` (slice (m, n) / volume (d, m, n) shapes
+        x eps-grid sizes x row buckets) this warms the shared SWEEP
+        launcher, exactly as before the method-registry refactor.  With
+        NO arguments it walks every registered method's ``warmup_spec``
+        and compiles each (launcher, shape, grid size, bucket)
+        combination once -- methods sharing a launcher dedup their
+        overlapping specs.
+
+        On a process-spanning mesh the leader's warmup launches ride the
         collective fabric, so followers precompile the same executables
         (followers themselves call :meth:`serve`, not ``warmup``).  A
         follower fault during warmup recovers exactly like one during
@@ -569,17 +604,42 @@ class SweepService:
             raise RuntimeError(
                 "warmup runs on the leader; followers precompile by "
                 "joining its collective warmup launches via serve()")
+        if shapes is None:
+            done: set = set()
+            for m in self.registry.methods():
+                spec = m.warmup_spec(self.scfg)
+                # the launcher's service-bound config (what followers
+                # compile against) is also the right warmup config
+                wcfg = m.launcher.follower_cfg(self.scfg)
+                for shape in spec.shapes:
+                    for e in spec.grid_sizes:
+                        for k in spec.row_buckets:
+                            k_pad = self._k_pad((m,), int(k))
+                            sig = self._sig(m.launcher, k_pad, tuple(shape),
+                                            m.launcher.eps_bucket(int(e)),
+                                            wcfg)
+                            if sig in done:
+                                continue
+                            done.add(sig)
+                            self._warm_one(m.launcher, tuple(shape), int(e),
+                                           k_pad, wcfg)
+            return
         cfg = self._check_cfg(cfg if cfg is not None else self.scfg.pcfg)
+        sweep = self.registry.get("featurize").launcher
         for shape in shapes:
-            shape = tuple(shape)
-            x = np.zeros((1,) + shape, np.float32)
             for e in grid_sizes:
                 for k in row_buckets:
-                    k_pad, e_pad = _row_bucket(k), _eps_bucket(e)
-                    out = self._collective_sweep(
-                        x, np.full((e_pad,), 1.0, np.float32), cfg, k_pad)
-                    np.asarray(DS.gather_rows(out))
-                    self._executables.add(self._sig(k_pad, shape, e_pad, cfg))
+                    self._warm_one(sweep, tuple(shape), int(e),
+                                   _row_bucket(int(k)), cfg)
+
+    def _warm_one(self, launcher: Launcher, shape: Tuple[int, ...],
+                  e: int, k_pad: int, cfg) -> None:
+        x = np.zeros((1,) + shape, np.float32)
+        e_pad = launcher.eps_bucket(e)
+        epss = np.full((e_pad,), launcher.warmup_eps, np.float32)
+        out = self._collective_sweep(launcher, x, epss, cfg, k_pad)
+        launcher.gather(out)
+        self._executables.add(self._sig(launcher, k_pad, shape, e_pad, cfg))
 
     def serve(self) -> None:
         """Block until the service stops.
@@ -614,6 +674,7 @@ class SweepService:
         """
         if self.role == "follower":
             self._worker.join()
+            self._post.shutdown(wait=True)
             if self._hb is not None:
                 self._hb.stop()
             return
@@ -624,6 +685,7 @@ class SweepService:
             self._stop = True
             self._cond.notify_all()
         self._worker.join()
+        self._post.shutdown(wait=True)   # drain host-side completions
         if len(self._procs0) > 1:
             if (self._transport == "gloo" and self._fabric_error is None
                     and len(self._procs) > 1):
@@ -650,7 +712,7 @@ class SweepService:
     # worker: micro-batching loop
     # ------------------------------------------------------------------
 
-    def _submit(self, req: _Request) -> Future:
+    def _submit(self, req: MethodRequest) -> Future:
         if self.role == "follower":
             raise RuntimeError(
                 "follower processes don't accept requests; submit to the "
@@ -667,37 +729,74 @@ class SweepService:
                 self._rejected += 1
                 raise RetryAfter(
                     "sweep-service queue is full",
-                    retry_after_s=max(self.scfg.max_wait_ms / 1e3,
-                                      self._ema_batch_s),
+                    retry_after_s=self._retry_after_estimate(pending),
                     pending_rows=pending)
             self._queue.append(req)
             self._requests[req.kind] += 1
             self._cond.notify_all()
         return req.future
 
+    def _retry_after_estimate(self, pending: int) -> float:
+        """Load-proportional backoff: queued rows over the recent drain
+        rate, floored at the current micro-batch window (an idle service
+        can't clear the queue faster than one window)."""
+        window_s = self._window_ms / 1e3
+        if self._ema_rows_per_s > 0:
+            return max(window_s, pending / self._ema_rows_per_s)
+        batches = -(-pending // max(1, self.scfg.max_batch_slices))
+        return max(window_s, self._ema_batch_s * batches)
+
     def _loop(self) -> None:
         while True:
             batch = self._next_batch()
             if batch is None:
                 return
+            self._live.acquire()
+            with self._mlock:
+                self._live_now += 1
             t0 = time.perf_counter()
             try:
                 self._process(batch)
             except F.FabricError as exc:
                 # fabric-scoped: the collective launch path exhausted
                 # recovery -- fail EVERYTHING and release serve()
+                self._release_live()
                 self._fail_fabric(exc, batch)
                 return
             except Exception as exc:  # request-scoped: fail the batch only
+                self._release_live()
                 for req in batch:
                     if not req.future.done():
                         req.future.set_exception(exc)
+                    self._note_done(req, ok=False)
             else:
                 dt = time.perf_counter() - t0
+                rows = sum(r.rows for r in batch)
                 self._ema_batch_s = (dt if not self._ema_batch_s
                                      else 0.7 * self._ema_batch_s + 0.3 * dt)
+                if dt > 0:
+                    rps = rows / dt
+                    self._ema_rows_per_s = (
+                        rps if not self._ema_rows_per_s
+                        else 0.7 * self._ema_rows_per_s + 0.3 * rps)
 
-    def _fail_fabric(self, exc: BaseException, batch: List[_Request]) -> None:
+    def _release_live(self) -> None:
+        with self._mlock:
+            self._live_now -= 1
+        self._live.release()
+
+    def _note_done(self, req: MethodRequest, ok: bool = True) -> None:
+        lat_ms = (time.perf_counter() - req.t_submit) * 1e3
+        with self._mlock:
+            st = self._mstats.setdefault(req.kind, {
+                "completed": 0, "failed": 0, "rows": 0,
+                "lat": collections.deque(maxlen=_LAT_RING)})
+            st["completed" if ok else "failed"] += 1
+            st["rows"] += req.rows
+            st["lat"].append(lat_ms)
+
+    def _fail_fabric(self, exc: BaseException,
+                     batch: List[MethodRequest]) -> None:
         """Fabric-scoped failure: poison the service, fail every pending
         future (in-flight batch AND queued requests), release serve()."""
         self._fabric_error = exc
@@ -712,17 +811,17 @@ class SweepService:
         if self._kv is not None:   # release any followers still joined
             F.kv_set(self._kv, f"{self._kvp}/shutdown", "fabric-error")
 
-    def _next_batch(self) -> Optional[List[_Request]]:
+    def _next_batch(self) -> Optional[List[MethodRequest]]:
         """Block until a batch is ready: pending rows reach
         ``max_batch_slices``, or the OLDEST pending request has waited
-        ``max_wait_ms`` (a single request flushes alone at the deadline),
-        or the service is closing (drains what is left)."""
+        the current adaptive window (a single request flushes alone at
+        the deadline), or the service is closing (drains what is left)."""
         with self._cond:
             while True:
                 if self._queue:
                     rows = sum(r.rows for r in self._queue)
                     deadline = (self._queue[0].t_submit +
-                                self.scfg.max_wait_ms / 1e3)
+                                self._window_ms / 1e3)
                     remaining = deadline - time.perf_counter()
                     if (rows >= self.scfg.max_batch_slices or
                             remaining <= 0 or self._stop):
@@ -733,6 +832,10 @@ class SweepService:
                             req = self._queue.popleft()
                             batch.append(req)
                             total += req.rows
+                        if not self._stop:
+                            self._note_flush(
+                                total >= self.scfg.max_batch_slices or
+                                bool(self._queue))
                         return batch
                     self._cond.wait(timeout=remaining)
                 elif self._stop:
@@ -740,18 +843,51 @@ class SweepService:
                 else:
                     self._cond.wait()
 
+    def _note_flush(self, loaded: bool) -> None:
+        """Adapt the micro-batch window to the flush that just happened:
+        a saturated flush halves the window toward ``min_wait_ms``
+        (companions are already queued -- waiting only adds latency); an
+        idle deadline flush grows it back toward the ``max_wait_ms``
+        ceiling.  Called under ``self._cond``."""
+        if not self.scfg.adapt_window:
+            return
+        if loaded:
+            self._window_ms = max(float(self.scfg.min_wait_ms),
+                                  self._window_ms * 0.5)
+            self._window_shrinks += 1
+        else:
+            if self._window_ms < self.scfg.max_wait_ms:
+                self._window_grows += 1
+            self._window_ms = min(float(self.scfg.max_wait_ms),
+                                  max(self._window_ms * 2.0,
+                                      self.scfg.max_wait_ms / 16.0))
+
     # ------------------------------------------------------------------
     # worker: coalesced launch + scatter-back + request completion
     # ------------------------------------------------------------------
 
-    def _sig(self, k_pad: int, shape: Tuple[int, ...], e_pad: int,
-             cfg: P.PredictorConfig) -> tuple:
+    def _sig(self, launcher: Launcher, k_pad: int, shape: Tuple[int, ...],
+             e_pad: int, cfg) -> tuple:
         # device ids distinguish a survivor submesh from the original
         # mesh of the same shape, so recovery invalidates by construction
         mesh_key = (None if self.mesh is None
                     else (self.mesh.axis_names, self.mesh.devices.shape,
                           tuple(d.id for d in self.mesh.devices.flat)))
-        return (mesh_key, k_pad, shape, e_pad, cfg)
+        return (mesh_key, launcher.name, k_pad, shape, e_pad, cfg)
+
+    def _k_pad(self, methods, k: int) -> int:
+        """Padded row count for a launch whose items came from
+        ``methods``: the smallest covering bucket of the methods' merged
+        sorted ladders, the power-of-two ladder when any method declares
+        none (the default), and the power-of-two fallback past the
+        largest declared bucket (bucket-cap overflow)."""
+        ladders = [m.batch_buckets for m in methods]
+        if not ladders or any(lad is None for lad in ladders):
+            return _row_bucket(k)
+        for b in sorted({b for lad in ladders for b in lad}):
+            if b >= k:
+                return b
+        return _row_bucket(k)
 
     # ------------------------------------------------------------------
     # collective launch fabric (leader/follower)
@@ -763,28 +899,27 @@ class SweepService:
         FI.fire("bcast")
         return MH.broadcast_one_to_all(x)
 
-    def _collective_sweep(self, stack: np.ndarray, epss: np.ndarray,
-                          cfg: P.PredictorConfig, k_pad: int):
-        """One ``sweep_padded`` launch, surviving follower loss.
+    def _collective_sweep(self, launcher: Launcher, stack: np.ndarray,
+                          epss: np.ndarray, cfg, k_pad: int):
+        """One padded launcher launch, surviving follower loss.
 
         Single-process: returns the (possibly still device-sharded)
         padded result.  Process-spanning mesh: broadcasts the launch
         descriptor + payload so followers enter the same collective
         (``multihost_utils.broadcast_one_to_all`` on the gloo epoch, the
         KV launch transport after recovery) and returns the gathered
-        host (k_pad, e, 2) array.  A retriable fabric fault shrinks the
+        host (k_pad, e, R) array.  A retriable fabric fault shrinks the
         mesh (:meth:`_recover`) and relaunches -- the returned rows are
         bit-equal regardless of which fabric generation computed them.
         """
         if not self._multiproc:
-            return DS.sweep_padded(stack, epss, cfg, k_pad=k_pad,
-                                   mesh=self.mesh)
+            return launcher.launch(stack, epss, cfg, k_pad, self.mesh)
         with self._launch_lock:
             err: Optional[F.FabricError] = None
             for _ in range(len(self._procs0) + 1):
                 try:
-                    return self._collective_sweep_once(stack, epss, cfg,
-                                                       k_pad)
+                    return self._collective_sweep_once(
+                        launcher, stack, epss, cfg, k_pad)
                 except F.FabricError as exc:
                     if not exc.retriable:
                         raise
@@ -794,14 +929,14 @@ class SweepService:
                 "collective launch kept failing across mesh shrinks",
                 kind="failed") from err
 
-    def _collective_sweep_once(self, stack: np.ndarray, epss: np.ndarray,
-                               cfg: P.PredictorConfig, k_pad: int):
+    def _collective_sweep_once(self, launcher: Launcher, stack: np.ndarray,
+                               epss: np.ndarray, cfg, k_pad: int):
         if not self._multiproc:      # degraded to leader-local serving
-            return DS.sweep_padded(stack, epss, cfg, k_pad=k_pad,
-                                   mesh=self.mesh)
+            return launcher.launch(stack, epss, cfg, k_pad, self.mesh)
         FI.fire("leader_launch")
         stack = np.ascontiguousarray(stack, np.float32)
         epss = np.ascontiguousarray(epss, np.float32)
+        gid = self.registry.launcher_id(launcher)
         if self._transport == "gloo":
             trailing = stack.shape[1:]
             hdr = np.zeros(self.HDR_LEN, np.int64)
@@ -809,6 +944,7 @@ class SweepService:
                 self.OP_LAUNCH, stack.shape[0], k_pad, stack.ndim)
             hdr[4 + (3 - len(trailing)):7] = trailing
             hdr[7] = len(epss)
+            hdr[8] = gid
 
             def launch():
                 self._bcast(hdr)
@@ -816,29 +952,31 @@ class SweepService:
                 # followers feed byte-identical inputs to the collective
                 st = np.asarray(self._bcast(stack))
                 ep = np.asarray(self._bcast(epss))
-                out = DS.sweep_padded(st, ep, cfg, k_pad=k_pad,
-                                      mesh=self.mesh)
-                return DS.gather_rows(out)
+                out = launcher.launch(st, ep, cfg, k_pad, self.mesh)
+                return launcher.gather(out)
 
             return self._bounded_collective(launch)
         # post-recovery transport: launch descriptor + payload + result
         # blocks through the coordination-service KV store.  A faulted
         # gloo collective leaves stale pair connections that poison any
         # later cross-process device collective in this cohort, so each
-        # survivor sweeps its contiguous row block on its own LOCAL mesh
-        # (row results are mesh-independent, hence still bit-equal) and
-        # no cross-process collective ever runs on a recovered fabric.
+        # survivor runs its contiguous row block's launcher computation
+        # on its own LOCAL mesh (rows are mesh-independent, hence still
+        # bit-equal) and no cross-process collective ever runs on a
+        # recovered fabric.
         seq = self._seq + 1
         base = f"{self._kvp}/l/{self._epoch}/{seq}"
         e = int(epss.shape[0])
+        R = launcher.row_width
         parts = self._partition(stack.shape[0])
         F.kv_put_bytes(self._kv, f"{base}/stack", stack.tobytes())
         F.kv_put_bytes(self._kv, f"{base}/eps", epss.tobytes())
         F.kv_set(self._kv, f"{base}/hdr", json.dumps(
-            {"shape": list(stack.shape), "e": e,
+            {"shape": list(stack.shape), "e": e, "g": gid,
              "parts": {str(p): list(lohi) for p, lohi in parts.items()}}))
         lo, hi = parts[self._me]
-        blocks = {self._me: self._local_rows(stack[lo:hi], epss, cfg, e)}
+        blocks = {self._me: self._local_rows(launcher, stack[lo:hi],
+                                             epss, cfg, e)}
         deadline = time.monotonic() + self.scfg.launch_timeout_s
         lost = []
         for pid in self._procs:
@@ -846,14 +984,14 @@ class SweepService:
                 continue
             plo, phi = parts[pid]
             if phi <= plo:
-                blocks[pid] = np.zeros((0, e, 2), np.float32)
+                blocks[pid] = np.zeros((0, e, R), np.float32)
                 continue
             data = self._collect_block(f"{base}/out/{pid}", pid, deadline)
-            if data is None or len(data) != (phi - plo) * e * 2 * 4:
+            if data is None or len(data) != (phi - plo) * e * R * 4:
                 lost.append(pid)
             else:
                 blocks[pid] = np.frombuffer(
-                    data, np.float32).reshape(phi - plo, e, 2)
+                    data, np.float32).reshape(phi - plo, e, R)
         if lost:
             raise F.FabricError(
                 "survivor(s) never returned their row blocks",
@@ -893,15 +1031,16 @@ class SweepService:
             lo = hi
         return parts
 
-    def _local_rows(self, stack: np.ndarray, epss: np.ndarray,
-                    cfg: P.PredictorConfig, e: int) -> np.ndarray:
-        """Sweep ``stack`` on this process's local mesh, rows to host."""
+    def _local_rows(self, launcher: Launcher, stack: np.ndarray,
+                    epss: np.ndarray, cfg, e: int) -> np.ndarray:
+        """Run ``stack``'s launcher computation on this process's local
+        mesh, rows to host."""
         k = stack.shape[0]
         if k == 0:
-            return np.zeros((0, e, 2), np.float32)
-        out = DS.sweep_padded(stack, epss, cfg, k_pad=_row_bucket(k),
-                              mesh=self._local_mesh)
-        return np.asarray(DS.gather_rows(out))[:k]
+            return np.zeros((0, e, launcher.row_width), np.float32)
+        out = launcher.launch(stack, epss, cfg, _row_bucket(k),
+                              self._local_mesh)
+        return launcher.gather(out)[:k]
 
     def _bounded_collective(self, fn):
         """Run one collective on a sacrificial thread under the launch
@@ -1106,19 +1245,20 @@ class SweepService:
         k, k_pad, rank = int(hdr[1]), int(hdr[2]), int(hdr[3])
         trailing = tuple(int(d) for d in hdr[4 + (3 - (rank - 1)):7])
         e = int(hdr[7])
+        launcher = self.registry.launcher(int(hdr[8]))
+        cfg = launcher.follower_cfg(self.scfg)
 
         def join():
             FI.fire("follower_launch")
             stack = np.asarray(self._bcast(
                 np.zeros((k,) + trailing, np.float32)))
             epss = np.asarray(self._bcast(np.zeros(e, np.float32)))
-            out = DS.sweep_padded(stack, epss, self.scfg.pcfg,
-                                  k_pad=k_pad, mesh=self.mesh)
-            DS.gather_rows(out)
+            out = launcher.launch(stack, epss, cfg, k_pad, self.mesh)
+            launcher.gather(out)
 
         if self._bounded_join(join) == "fault":
             return "fault"
-        self._count_follower_launch(k, k_pad, trailing, e)
+        self._count_follower_launch(launcher, k, k_pad, trailing, e, cfg)
         return None
 
     def _follower_kv_step(self) -> Optional[str]:
@@ -1135,6 +1275,8 @@ class SweepService:
                                     lost=(self._leader_pid,))
             return None              # keep polling
         hdr = json.loads(raw)
+        launcher = self.registry.launcher(int(hdr.get("g", 0)))
+        cfg = launcher.follower_cfg(self.scfg)
         lo, hi = hdr["parts"].get(str(self._me), (0, 0))
         timeout_ms = int(self.scfg.launch_timeout_s * 1000)
 
@@ -1150,7 +1292,7 @@ class SweepService:
             stack = np.frombuffer(st, np.float32).reshape(
                 hdr["shape"])[lo:hi].copy()
             epss = np.frombuffer(ep, np.float32).copy()
-            rows = self._local_rows(stack, epss, self.scfg.pcfg,
+            rows = self._local_rows(launcher, stack, epss, cfg,
                                     int(hdr["e"]))
             F.kv_put_bytes(self._kv, f"{base}/out/{self._me}",
                            np.ascontiguousarray(rows, np.float32).tobytes())
@@ -1160,8 +1302,8 @@ class SweepService:
         self._seq += 1
         shape = tuple(hdr["shape"])
         self._count_follower_launch(
-            hi - lo, _row_bucket(hi - lo) if hi > lo else 0,
-            shape[1:], int(hdr["e"]))
+            launcher, hi - lo, _row_bucket(hi - lo) if hi > lo else 0,
+            shape[1:], int(hdr["e"]), cfg)
         return None
 
     def _bounded_join(self, join) -> Optional[str]:
@@ -1187,13 +1329,13 @@ class SweepService:
                                     lost=(self._leader_pid,))
         return "fault" if jb.error is not None else None
 
-    def _count_follower_launch(self, k: int, k_pad: int, trailing: tuple,
-                               e: int) -> None:
+    def _count_follower_launch(self, launcher: Launcher, k: int, k_pad: int,
+                               trailing: tuple, e: int, cfg) -> None:
         self._launches += 1
         self._rows_launched += k
         self._pad_rows += k_pad - k
-        self._executables.add(self._sig(k_pad, tuple(trailing), e,
-                                        self.scfg.pcfg))
+        self._executables.add(
+            self._sig(launcher, k_pad, tuple(trailing), e, cfg))
 
     def _follower_recover(self) -> None:
         """Rejoin the fabric at the epoch the leader published (or learn
@@ -1240,11 +1382,15 @@ class SweepService:
                     kind="timeout")
             time.sleep(0.1)
 
-    def _process(self, batch: List[_Request]) -> None:
+    # ------------------------------------------------------------------
+    # batch resolution (generic over methods/launchers)
+    # ------------------------------------------------------------------
+
+    def _process(self, batch: List[MethodRequest]) -> None:
         self._batches += 1
         # 1. resolve the cross-request cache; group the misses by
-        #    (slice shape, engine config) and dedup identical slices,
-        #    unioning the error bounds each digest needs
+        #    (launcher, trailing shape, launch config) and dedup
+        #    identical rows, unioning the eps keys each digest needs
         local: Dict[Tuple[tuple, float], np.ndarray] = {}
         need: Dict[tuple, dict] = {}
         for req in batch:
@@ -1263,41 +1409,65 @@ class SweepService:
                     if row is not None:
                         local[(it.key, ek)] = row
                     else:
-                        group = need.setdefault((it.x.shape, it.key[1]), {})
-                        entry = group.setdefault(it.key, (it.x, set()))
+                        group = need.setdefault(
+                            (req.method.launcher, it.x.shape, it.key[1]),
+                            {"items": {}, "methods": set()})
+                        group["methods"].add(req.method)
+                        entry = group["items"].setdefault(
+                            it.key, (it.x, set()))
                         entry[1].add(ek)
-        # 2. ONE launch per (shape, config) group (eps unions wider than
-        #    max_eps_per_launch are chunked)
-        for (shape, cfg), digests in need.items():
-            union = sorted({e for _, es in digests.values() for e in es})
+        # 2. ONE launch per (launcher, shape, config) group (eps unions
+        #    wider than max_eps_per_launch are chunked)
+        for (launcher, shape, cfg), group in need.items():
+            union = sorted({e for _, es in group["items"].values()
+                            for e in es})
             step = self.scfg.max_eps_per_launch
             for lo in range(0, len(union), step):
-                self._launch(digests, union[lo:lo + step], cfg, local)
-        # 3. complete every request from the batch-local rows
-        for req in batch:
-            try:
-                req.future.set_result(self._finish(req, local))
-            except Exception as exc:
-                req.future.set_exception(exc)
+                self._launch(launcher, group, union[lo:lo + step], cfg,
+                             local)
+        # 3. complete every request from the batch-local rows -- on the
+        #    post-processing pool, so the device thread moves straight
+        #    to the next batch (``max_live_batches`` bounds the overlap)
 
-    def _launch(self, digests: dict, eps_chunk: List[float],
-                cfg: P.PredictorConfig,
+        def rows_for(item: Item, _local=local) -> np.ndarray:
+            return np.stack([_local[(item.key, ek)]
+                             for ek in item.eps_keys])
+
+        def complete():
+            try:
+                for req in batch:
+                    try:
+                        req.future.set_result(
+                            req.method.post_process(req, rows_for))
+                        self._note_done(req, ok=True)
+                    except Exception as exc:
+                        if not req.future.done():
+                            req.future.set_exception(exc)
+                        self._note_done(req, ok=False)
+            finally:
+                self._release_live()
+
+        self._post.submit(complete)
+
+    def _launch(self, launcher: Launcher, group: dict,
+                eps_chunk: List[float], cfg,
                 local: Dict[Tuple[tuple, float], np.ndarray]) -> None:
+        digests = group["items"]
         order = list(digests)
         stack = np.stack([digests[key][0] for key in order])
         k = len(order)
-        k_pad = _row_bucket(k)
-        e_pad = _eps_bucket(len(eps_chunk))
+        k_pad = self._k_pad(group["methods"], k)
+        e_pad = launcher.eps_bucket(len(eps_chunk))
         epss = np.asarray(
             eps_chunk + [eps_chunk[-1]] * (e_pad - len(eps_chunk)),
             np.float32)
-        out = self._collective_sweep(stack, epss, cfg, k_pad)
+        out = self._collective_sweep(launcher, stack, epss, cfg, k_pad)
         # scatter-back: ONE host transfer for the whole coalesced batch,
         # split into per-digest row blocks (pad rows dropped)
         blocks = DS.scatter_requests(out, [1] * k)
         for key, block in zip(order, blocks):
             for j, ek in enumerate(eps_chunk):
-                # owned copy: a view would pin the whole (k_pad, e_pad, 2)
+                # owned copy: a view would pin the whole (k_pad, e_pad, R)
                 # batch result in memory for the row's cache lifetime
                 row = np.array(block[0, j])
                 local[(key, ek)] = row
@@ -1305,27 +1475,5 @@ class SweepService:
         self._launches += 1
         self._rows_launched += k
         self._pad_rows += k_pad - k
-        self._executables.add(self._sig(k_pad, stack.shape[1:], e_pad, cfg))
-
-    def _finish(self, req: _Request,
-                local: Dict[Tuple[tuple, float], np.ndarray]):
-        def rows_for(item: _Item) -> np.ndarray:
-            return np.stack([local[(item.key, ek)] for ek in item.eps_keys])
-
-        if req.kind == "featurize":
-            return np.stack([rows_for(it) for it in req.items])
-        if req.kind == "find_eb":
-            gm = req.payload["grid_model"]
-            feats = rows_for(req.items[0])                      # (e, 2)
-            feat_cache = P.get_engine(gm.cfg).cached(
-                req.payload["data"], features=feats, epss=gm.ebs)
-            return UC.find_error_bound_for_cr(
-                gm, req.payload["data"], req.payload["target_cr"],
-                tol=req.payload["tol"], max_iters=req.payload["max_iters"],
-                feat_cache=feat_cache)
-        if req.kind == "best_compressor":
-            feats = rows_for(req.items[0])                      # (1, 2)
-            return UC.best_compressor(
-                req.payload["models"], req.payload["data"],
-                req.payload["eps"], feats=feats)
-        raise ValueError(f"unknown request kind {req.kind!r}")
+        self._executables.add(
+            self._sig(launcher, k_pad, stack.shape[1:], e_pad, cfg))

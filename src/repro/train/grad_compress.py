@@ -49,7 +49,10 @@ def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Block-wise symmetric int8: returns (codes (nb, BLOCK) i8, scales)."""
     blocks = _blockify(x.reshape(-1).astype(jnp.float32))
     amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
+    # explicit reciprocal-multiply: XLA rewrites /127.0 into * (1/127.0)
+    # when this runs under jit but not eagerly, so the division form makes
+    # jitted and eager quantization disagree by 1 ulp in the scales
+    scale = jnp.maximum(amax, 1e-12) * (1.0 / 127.0)
     codes = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
     return codes, scale[:, 0]
 

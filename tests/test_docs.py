@@ -69,21 +69,46 @@ def test_docs_reference_real_code():
     serving = _read("docs", "serving.md")
     for sym in ("max_batch_slices", "max_wait_ms", "cache_bytes",
                 "cache_admit_after", "sweep_padded", "scatter_requests",
-                "dist_init", "serve()"):
+                "dist_init", "serve()",
+                # servable-method platform vocabulary
+                "ServableMethod", "kv_gate", "max_live_batches",
+                "min_wait_ms", "adapt_window", "batch_buckets",
+                "warmup_spec"):
         assert sym in serving, f"serving.md lost {sym}"
     mapping = _read("docs", "paper_mapping.md")
     svc = _read("src", "repro", "serve", "sweep_service.py")
     for sym in ("quantized_entropy", "svd_trunc", "hosvd_trunc_batch",
                 "find_error_bound_for_cr", "best_compressor",
-                "bench_3d", "EbGridModel"):
+                "bench_3d", "EbGridModel", "ServableMethod",
+                "default_registry", "kv_gate"):
         assert sym in mapping, f"paper_mapping.md lost {sym}"
     # the knobs the serving doc teaches must exist on ServiceConfig
     from repro.serve.sweep_service import ServiceConfig
     cfg = ServiceConfig()
     for knob in ("max_batch_slices", "max_wait_ms", "cache_bytes",
-                 "cache_admit_after", "max_eps_per_launch"):
+                 "cache_admit_after", "max_eps_per_launch",
+                 "min_wait_ms", "adapt_window", "max_live_batches",
+                 "post_workers"):
         assert hasattr(cfg, knob)
     assert "broadcast_one_to_all" in svc  # the fabric serving.md describes
+
+
+def test_method_platform_modules_expose_documented_api():
+    """The symbols serving.md/paper_mapping.md teach for the method
+    layer must exist in the new modules."""
+    method = _read("src", "repro", "serve", "method.py")
+    for sym in ("class ServableMethod", "def pre_process",
+                "def post_process", "def warmup_spec", "batch_buckets",
+                "class SweepLauncher", "class Int8CRLauncher",
+                "class KVGateMethod"):
+        assert sym in method, f"method.py lost {sym}"
+    registry = _read("src", "repro", "serve", "registry.py")
+    for sym in ("def default_registry", "def register",
+                "def launcher_id"):
+        assert sym in registry, f"registry.py lost {sym}"
+    from repro.serve.registry import default_registry
+    assert default_registry().names() == (
+        "featurize", "find_eb", "best_compressor", "kv_gate")
 
 
 def test_paper_mapping_paths_exist():

@@ -1,0 +1,416 @@
+"""Servable-method platform: registry, buckets, adaptive window,
+admission control, kv_gate, and the fused engine QDQ path.
+
+Complements ``test_sweep_service.py`` (which pins the pre-refactor
+behavior of the three paper methods): everything HERE is specific to the
+method registry introduced by the platform refactor -- bucket-ladder
+boundary values, per-method warmup coverage, the fourth (``kv_gate``)
+method end to end, load-proportional ``RetryAfter`` hints, and the
+per-method stats counters.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import predictors as P
+from repro.serve import method as MM
+from repro.serve.registry import MethodRegistry, default_registry
+from repro.serve.sweep_service import (RetryAfter, ServiceConfig,
+                                       SweepService, _eps_bucket,
+                                       _row_bucket)
+
+
+def _slices(k, n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    base = np.cumsum(rng.standard_normal((k, n, n)), axis=-1)
+    return np.asarray(base, np.float32)
+
+
+# ------------------------------------------------------------- buckets
+
+def test_row_bucket_boundaries():
+    # k=1 and exact powers of two map to themselves; k=pow2+1 doubles
+    assert _row_bucket(1) == 1
+    assert _row_bucket(2) == 2
+    assert _row_bucket(3) == 4
+    assert _row_bucket(4) == 4
+    assert _row_bucket(5) == 8
+    assert _row_bucket(1024) == 1024
+    assert _row_bucket(1025) == 2048
+
+
+def test_eps_bucket_boundaries():
+    # every declared bucket maps to itself (exact-boundary values)
+    for b in MM._EPS_BUCKETS:
+        assert _eps_bucket(b) == b
+    assert _eps_bucket(5) == 6
+    assert _eps_bucket(31) == 32
+    # bucket-cap overflow: past the largest declared bucket the ladder
+    # continues in 16-wide steps
+    assert _eps_bucket(33) == 48
+    assert _eps_bucket(48) == 48
+    assert _eps_bucket(49) == 64
+
+
+def test_method_ladder_pad_and_overflow():
+    """A method's explicit batch_buckets pad batches to the smallest
+    covering bucket and fall back to the pow2 ladder past the cap."""
+    reg = MethodRegistry()
+    m = reg.register(MM.FeaturizeMethod(MM.SweepLauncher(),
+                                        batch_buckets=(3, 6)))
+    with SweepService(ServiceConfig(max_wait_ms=50.0), registry=reg) as svc:
+        assert svc._k_pad((m,), 2) == 3
+        assert svc._k_pad((m,), 3) == 3
+        assert svc._k_pad((m,), 4) == 6
+        assert svc._k_pad((m,), 7) == 8          # overflow -> pow2 ladder
+        s = _slices(2)
+        got = svc.featurize(s, [1e-2])
+        ref = np.asarray(P.features_sweep(s, [1e-2], sharded=False))
+        assert np.array_equal(got, ref)
+        assert svc.stats()["pad_rows"] == 1      # 2 rows padded to 3
+
+
+def test_unsorted_batch_buckets_rejected():
+    with pytest.raises(ValueError, match="sorted"):
+        MM.FeaturizeMethod(MM.SweepLauncher(), batch_buckets=(4, 2))
+    with pytest.raises(ValueError, match="sorted"):
+        MM.FeaturizeMethod(MM.SweepLauncher(), batch_buckets=(2, 2, 4))
+    with pytest.raises(ValueError, match="sorted"):
+        MM.FeaturizeMethod(MM.SweepLauncher(), batch_buckets=())
+
+
+# ------------------------------------------------------------- registry
+
+def test_default_registry_shape():
+    reg = default_registry()
+    assert reg.names() == ("featurize", "find_eb", "best_compressor",
+                           "kv_gate")
+    # the three paper methods share ONE launcher instance (that identity
+    # is what makes them coalesce into the same launches)
+    sweep = reg.get("featurize").launcher
+    assert reg.get("find_eb").launcher is sweep
+    assert reg.get("best_compressor").launcher is sweep
+    assert reg.get("kv_gate").launcher is not sweep
+    # launcher wire ids are assigned in registration order
+    assert reg.launcher_id(sweep) == 0
+    assert reg.launcher_id(reg.get("kv_gate").launcher) == 1
+    assert reg.launcher(0) is sweep
+    assert "featurize" in reg and "nope" not in reg
+
+
+def test_registry_rejects_duplicates_and_unknowns():
+    reg = default_registry()
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(MM.FeaturizeMethod(MM.SweepLauncher()))
+    with pytest.raises(ValueError, match="kv_gate"):
+        reg.get("not-a-method")
+
+
+def test_submit_unknown_method_raises():
+    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+        with pytest.raises(ValueError, match="registered"):
+            svc.submit("not-a-method", _slices(1), [1e-2])
+
+
+# ------------------------------------------------------------- warmup
+
+def test_warmup_covers_all_registered_methods():
+    """No-arg warmup compiles every registered method's warmup_spec
+    buckets -- both launchers appear in the executable set, and specs
+    shared by methods on the same launcher are deduplicated."""
+    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+        svc.warmup()
+        sigs = svc._executables
+        assert {s[1] for s in sigs} == {"sweep", "int8cr"}
+        sweep_sigs = {s for s in sigs if s[1] == "sweep"}
+        gate_sigs = {s for s in sigs if s[1] == "int8cr"}
+        # default spec: (32, 32) x 1 eps x buckets {1, 2}; the three
+        # sweep methods share it, so exactly 2 sweep executables compile
+        assert {(s[2], s[3]) for s in sweep_sigs} == \
+            {(1, (32, 32)), (2, (32, 32))}
+        assert {(s[2], s[3]) for s in gate_sigs} == \
+            {(1, (256,)), (2, (256,))}
+        assert len(sigs) == 4
+        assert svc.launches == 0     # warmup launches aren't traffic
+        # warmed buckets serve real traffic without new executables
+        before = len(svc._executables)
+        svc.kv_gate([np.zeros(256, np.float32)])
+        assert len(svc._executables) == before
+
+
+# ------------------------------------------------------------- kv_gate
+
+def test_kv_gate_matches_reference_model():
+    """Service-batched kv_gate CRs match per-leaf predicted_cr_int8 on
+    the raw (unflattened) leaves, and make identical gate decisions."""
+    import jax.numpy as jnp
+    from repro.train.grad_compress import predicted_cr_int8
+
+    rng = np.random.default_rng(1)
+    leaves = [
+        np.asarray(rng.standard_normal((2, 3, 8, 16)), np.float32),
+        np.asarray(rng.standard_normal((4, 64)) * 1e-3, np.float32),
+        np.zeros((512,), np.float32) + 0.25,     # constant: high CR
+    ]
+    ref = np.asarray([float(predicted_cr_int8(jnp.asarray(x)))
+                      for x in leaves], np.float32)
+    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+        got = svc.kv_gate(leaves)
+    assert got.shape == (3,)
+    # vmapped-batch vs single-leaf reduction order may differ in the
+    # last ulp, so compare numerically and on the gate decision
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+    assert [g >= 2.5 for g in got] == [r >= 2.5 for r in ref]
+
+
+def test_kv_gate_dedups_and_coalesces():
+    """Identical leaves dedup inside a batch; concurrent kv_gate and
+    featurize requests ride the same micro-batch (two launches: one per
+    launcher) with zero method-specific branching."""
+    leaf = np.asarray(np.random.default_rng(2).standard_normal(128),
+                      np.float32)
+    with SweepService(ServiceConfig(max_wait_ms=200.0)) as svc:
+        f1 = svc.submit_kv_gate([leaf, leaf.copy(), leaf + 1.0])
+        f2 = svc.submit_featurize(_slices(2), [1e-2])
+        crs = f1.result(timeout=60)
+        f2.result(timeout=60)
+        assert crs[0] == crs[1]                  # same digest, same row
+        st = svc.stats()
+        # 3 kv leaves dedup to 2 rows + 2 featurize rows, in exactly one
+        # launch per launcher
+        assert st["launches"] == 2
+        assert st["rows_launched"] == 4
+        assert st["batches"] == 1
+
+
+def test_kv_gate_rejects_empty():
+    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+        with pytest.raises(ValueError, match="leaf"):
+            svc.submit_kv_gate([])
+        with pytest.raises(ValueError, match="empty"):
+            svc.submit_kv_gate([np.zeros((0,), np.float32)])
+
+
+# ------------------------------------------- engine: fused QDQ + service
+
+def _reference_compress(cache, ratio):
+    """The pre-refactor per-leaf engine path: separate quantize /
+    dequantize calls per gated leaf + device-shape byte metering."""
+    import jax
+    import jax.numpy as jnp
+    from repro.train.grad_compress import (dequantize_int8,
+                                           predicted_cr_int8,
+                                           quantize_int8)
+
+    leaves, tdef = jax.tree.flatten(cache)
+    saved = total = 0
+    for i, x in enumerate(leaves):
+        if x.dtype not in (jnp.bfloat16, jnp.float32) or x.ndim < 4:
+            continue
+        cr = float(predicted_cr_int8(x.astype(jnp.float32)))
+        total += x.size * x.dtype.itemsize
+        if cr >= ratio:
+            codes, scales = quantize_int8(x.astype(jnp.float32))
+            saved += int(x.size * x.dtype.itemsize -
+                         (codes.size + scales.size * 4))
+            leaves[i] = dequantize_int8(codes, scales, x.shape, x.dtype)
+    return jax.tree.unflatten(tdef, leaves), saved, total
+
+
+def _kv_cache(seed=3):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return {
+        # smooth (low-entropy) leaf: clears the 2.5x gate
+        "k": jnp.asarray(np.cumsum(rng.standard_normal((1, 2, 4, 256)),
+                                   axis=-1) * 1e-3, jnp.float32),
+        # white-noise leaf: fails the gate, stays untouched
+        "v": jnp.asarray(rng.standard_normal((1, 2, 4, 256)), jnp.float32),
+        # rank-2 leaf: not a KV block, never a candidate
+        "aux": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+    }
+
+
+def test_engine_fused_qdq_bitequal():
+    """The fused one-jit quantize-dequantize rewrite produces leaves and
+    byte metering bit-equal to the old per-leaf two-call path."""
+    import jax
+    from repro.serve.engine import Engine, ServeConfig
+
+    cache = _kv_cache()
+    scfg = ServeConfig(kv_compress=True, kv_gate_ratio=2.5)
+    eng = Engine(None, None, scfg)       # jits are lazy: no model needed
+    got = eng._maybe_compress_cache(cache)
+    ref, saved, total = _reference_compress(cache, scfg.kv_gate_ratio)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert eng.kv_saved_bytes == saved
+    assert eng.kv_total_bytes == total
+    assert saved > 0                     # the smooth leaf really gated
+
+
+def test_engine_gate_through_sweep_service():
+    """With sweep_service= attached the engine's gate CRs come from the
+    registered kv_gate method; the compressed cache matches the private
+    jit engine (gate ratio far from the CR values, so the last-ulp
+    launcher difference cannot flip a decision)."""
+    import jax
+    from repro.serve.engine import Engine, ServeConfig
+
+    cache = _kv_cache(seed=4)
+    scfg = ServeConfig(kv_compress=True, kv_gate_ratio=2.5)
+    with SweepService(ServiceConfig(max_wait_ms=2.0)) as svc:
+        eng = Engine(None, None, scfg, sweep_service=svc)
+        got = eng._maybe_compress_cache(cache)
+        st = svc.stats()
+    ref_eng = Engine(None, None, scfg)
+    ref = ref_eng._maybe_compress_cache(cache)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert eng.kv_saved_bytes == ref_eng.kv_saved_bytes
+    assert eng.kv_total_bytes == ref_eng.kv_total_bytes
+    assert st["methods"]["kv_gate"]["completed"] == 1
+    assert st["methods"]["kv_gate"]["rows"] == 2     # the two candidates
+
+
+# ----------------------------------------------- adaptive window + stats
+
+def test_adaptive_window_shrinks_and_recovers():
+    """Deterministic unit drive of the window controller: loaded flushes
+    halve toward min_wait_ms, idle flushes grow back to the ceiling."""
+    scfg = ServiceConfig(max_wait_ms=8.0, min_wait_ms=0.5)
+    with SweepService(scfg) as svc:
+        assert svc.stats()["window_ms"] == 8.0
+        for want in (4.0, 2.0, 1.0, 0.5, 0.5):
+            svc._note_flush(True)
+            assert svc._window_ms == want
+        assert svc._window_shrinks == 5
+        for want in (1.0, 2.0, 4.0, 8.0, 8.0):
+            svc._note_flush(False)
+            assert svc._window_ms == want
+        assert svc.stats()["window_ms"] == 8.0
+
+
+def test_adaptive_window_disabled_stays_pinned():
+    scfg = ServiceConfig(max_wait_ms=8.0, adapt_window=False)
+    with SweepService(scfg) as svc:
+        for _ in range(4):
+            svc._note_flush(True)
+        assert svc._window_ms == 8.0
+        assert svc.stats()["window_shrinks"] == 0
+
+
+def test_saturated_traffic_shrinks_window_live():
+    """End to end: back-to-back over-cap submissions drive the window
+    down from the configured ceiling."""
+    scfg = ServiceConfig(max_batch_slices=2, max_wait_ms=50.0,
+                         min_wait_ms=0.0)
+    with SweepService(scfg) as svc:
+        futs = [svc.submit_featurize(_slices(2, seed=s), [1e-2])
+                for s in range(4)]
+        for f in futs:
+            f.result(timeout=60)
+        st = svc.stats()
+        assert st["window_shrinks"] >= 1
+        assert st["window_ms"] < 50.0
+
+
+def test_per_method_counters():
+    with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
+        svc.featurize(_slices(2), [1e-2, 1e-1])
+        svc.kv_gate([np.ones(64, np.float32)])
+        m = svc.stats()["methods"]
+    assert m["featurize"]["completed"] == 1
+    assert m["featurize"]["rows"] == 2
+    assert m["featurize"]["p95_ms"] >= m["featurize"]["p50_ms"] > 0
+    assert m["kv_gate"]["completed"] == 1
+    assert m["kv_gate"]["failed"] == 0
+
+
+def test_max_live_batches_validated_and_reported():
+    with SweepService(ServiceConfig(max_wait_ms=5.0,
+                                    max_live_batches=1)) as svc:
+        svc.featurize(_slices(1), [1e-2])
+        st = svc.stats()
+        assert st["live_batches"] == 0           # drained after .result()
+
+
+# ----------------------------------------------- multi-process kv_gate
+
+def test_kv_gate_across_processes():
+    """The launch header's launcher wire id routes a mixed
+    kv_gate+featurize batch across the leader/follower fabric: one
+    collective launch per launcher, CRs matching the local model."""
+    from _child import run_procs
+
+    outs = run_procs("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch import mesh as M
+        from repro.serve.sweep_service import ServiceConfig, SweepService
+        from repro.train.grad_compress import predicted_cr_int8
+
+        mesh = M.make_sweep_mesh()
+        svc = SweepService(ServiceConfig(max_wait_ms=200.0), mesh=mesh)
+        rng = np.random.default_rng(0)
+        leaves = [
+            np.asarray(rng.standard_normal((2, 2, 4, 32)), np.float32),
+            np.asarray(np.cumsum(rng.standard_normal(512)) * 1e-3,
+                       np.float32),
+        ]
+        if PID == 0:
+            ref = np.asarray(
+                [float(predicted_cr_int8(jnp.asarray(x))) for x in leaves],
+                np.float32)
+            s = np.asarray(rng.standard_normal((3, 32, 32)), np.float32)
+            f1 = svc.submit_kv_gate(leaves)
+            f2 = svc.submit_featurize(s, [1e-2])
+            got = f1.result(timeout=120)
+            f2.result(timeout=120)
+            np.testing.assert_allclose(got, ref, rtol=1e-5)
+            st = svc.stats()
+            assert st["launches"] == 2, st["launches"]
+            assert st["methods"]["kv_gate"]["completed"] == 1
+            svc.close()
+            print("KVGATE LEADER OK", flush=True)
+        else:
+            svc.serve()
+            assert svc.launches == 2, svc.launches
+            print("KVGATE FOLLOWER OK", flush=True)
+    """)
+    assert "KVGATE LEADER OK" in outs[0]
+    assert "KVGATE FOLLOWER OK" in outs[1]
+
+
+# ------------------------------------------------- load-aware RetryAfter
+
+def test_retry_after_is_load_proportional():
+    """With a measured drain rate the backoff hint scales with queue
+    depth instead of parroting the wait window."""
+    scfg = ServiceConfig(max_wait_ms=10_000.0, adapt_window=False,
+                         max_queue_rows=4)
+    svc = SweepService(scfg)
+    try:
+        # park 40 rows (a single over-wide request is always admitted);
+        # nothing flushes for 10s, so the queue depth is stable
+        parked = svc.submit_featurize(_slices(40, n=8), [1e-2])
+        deadline = time.perf_counter() + 5.0
+        while not svc.stats()["queue_rows"] and \
+                time.perf_counter() < deadline:
+            time.sleep(0.01)
+        svc._ema_rows_per_s = 2.0                # recent drain: 2 rows/s
+        with pytest.raises(RetryAfter) as ei:
+            svc.submit_featurize(_slices(1, n=8), [1e-2])
+        # 40 pending rows / 2 rows/s = 20s >> the 10s window floor
+        assert ei.value.pending_rows == 40
+        assert ei.value.retry_after_s == pytest.approx(20.0)
+        # with no drain-rate estimate the hint floors at the window
+        svc._ema_rows_per_s = 0.0
+        svc._ema_batch_s = 0.0
+        with pytest.raises(RetryAfter) as ei:
+            svc.submit_featurize(_slices(1, n=8), [1e-2])
+        assert ei.value.retry_after_s == pytest.approx(10.0)
+        assert svc.stats()["rejected"] == 2
+    finally:
+        svc.close()                              # drains the parked rows
+        parked.result(timeout=120)
