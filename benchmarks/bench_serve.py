@@ -109,13 +109,13 @@ def _child(out_path: str) -> None:
                 out.append(("uc2", UC.best_compressor(uc2, x, eps)))
         return out
 
-    serial_round(round_targets[0])                   # warm the jit caches
-    serial_times, serial_ref = [], None
-    for _ in range(REPS):
-        t0 = time.perf_counter()
-        serial_ref = [serial_round(t) for t in round_targets]
-        serial_times.append(time.perf_counter() - t0)
-    serial_s = float(np.median(serial_times))
+    serial_ref = []
+
+    def serial_session():
+        serial_ref[:] = [serial_round(t) for t in round_targets]
+
+    from benchmarks import common as BC
+    serial_s = BC.time_fn(serial_session, warmup=1, iters=REPS)
 
     def coalesced_round(svc, targets, lat):
         results = [None] * 8
@@ -188,10 +188,8 @@ def _child(out_path: str) -> None:
         with S.use_mesh(mesh):
             return [np.asarray(P.features_sweep(st, epss)) for st in stacks]
 
-    serial_fanin()                                   # warm
-    t0 = time.perf_counter()
-    fan_serial_ref = serial_fanin()
-    fan_serial_s = time.perf_counter() - t0
+    fan_serial_ref = serial_fanin()                  # warm
+    fan_serial_s = BC.time_fn(serial_fanin, warmup=0, iters=1)
 
     fan_scfg = ServiceConfig(max_batch_slices=16, max_wait_ms=5.0)
     with SweepService(fan_scfg, mesh=mesh) as svc:   # warm executables

@@ -1,0 +1,120 @@
+"""Autotuner gate: the committed tuned table must be bit-safe and fast.
+
+For every cell in this backend's tuned table (``kernels/tuned/<backend>
+.json``), re-time the default and tuned configurations through the same
+ops-level entry points the production paths use and enforce:
+
+* **bit-equality** -- the tuned configuration's output is bitwise
+  identical to the default's (the tuner's bit-safety filter must hold
+  on this machine too, not just the one that generated the table);
+* **no regression** -- tuned <= default x 1.05 on every cell (5% noise
+  allowance for CI timer jitter; the tuner's 2% hysteresis means real
+  entries should clear this easily);
+* **a real win** -- on the CPU backend, the best qent cell must hit
+  >= 1.15x (the speedup that justifies shipping the table).
+
+Writes ``results/BENCH_tune.json`` with per-cell timings, speedups, and
+achieved-vs-roofline fractions (cost models from benchmarks.roofline,
+peaks from the backend HW table; CPU bandwidth is the measured STREAM
+number).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+QENT_GATE = 1.15      # best CPU qent cell must beat the default by this
+NOISE = 1.05          # per-cell regression allowance (timer jitter)
+ITERS = 5
+
+
+def main() -> dict:
+    from benchmarks import common
+    from benchmarks import roofline as RF
+    from repro.kernels import tune as KT
+    from repro.kernels.gram import gram as GK
+    from repro.kernels.gram import ops as gram_ops
+    from repro.kernels.qent import qent as QK
+    from repro.kernels.qent import ops as qent_ops
+
+    backend = KT.backend_kind()
+    KT.invalidate_table_cache()
+    table = KT.load_table(backend)
+    assert table is not None, (
+        f"no tuned table for backend {backend!r} "
+        f"({KT.table_path(backend)}) -- run python -m repro.kernels.tune")
+    hw = RF.backend_hw(backend)
+
+    cells = {}
+    qent_best = 0.0
+    for key in sorted(table["cells"]):
+        cell = table["cells"][key]
+        shape = tuple(cell["shape"])
+        if key.startswith("gram:"):
+            k, m, n = shape
+            x = KT._rng((k, m, n))
+            default = {"bn": GK.DEFAULT_BN, "bk": GK.DEFAULT_BK}
+            tuned = {"bn": cell["bn"], "bk": cell["bk"]}
+
+            def run(bn, bk, x=x):
+                return gram_ops.gram_batched(x, bn=bn, bk=bk)
+        else:
+            k, n, bins, e = shape
+            x = KT._rng((k, n), seed=1)
+            epss = np.geomspace(1e-3, 1e-1, e).astype(np.float32)
+            default = {"tile": QK.DEFAULT_TILE}
+            tuned = {"tile": cell["tile"]}
+
+            def run(tile, x=x, epss=epss, bins=bins):
+                return qent_ops.quantized_entropy_sweep(
+                    x, epss, bins, tile=tile)
+
+        ref = np.asarray(run(*default.values()))
+        out = np.asarray(run(*tuned.values()))
+        bitequal = bool(np.array_equal(ref, out))
+        t_def = common.time_fn(run, *default.values(), iters=ITERS)
+        if tuned == default:
+            # identical config -> identical executable; timing it twice
+            # and comparing would gate on pure timer jitter
+            t_tun = t_def
+        else:
+            t_tun = common.time_fn(run, *tuned.values(), iters=ITERS)
+        speedup = t_def / t_tun
+        roof = RF.kernel_cell(key.split(":")[0], shape, t_tun, hw)
+        if key.startswith("qent:"):
+            qent_best = max(qent_best, speedup)
+        cells[key] = {
+            "shape": list(shape), "default": default, "tuned": tuned,
+            "t_default_s": t_def, "t_tuned_s": t_tun,
+            "speedup": speedup, "bitequal": bitequal,
+            "table_speedup": cell.get("speedup"),
+            "frac_peak_flops": roof["frac_peak_flops"],
+            "frac_peak_bw": roof["frac_peak_bw"], "bound": roof["bound"],
+        }
+        common.emit(
+            f"tune/{key}", t_tun * 1e6,
+            f"speedup={speedup:.2f}x (table {cell.get('speedup', 1):.2f}x) "
+            f"bitequal={bitequal} bound={roof['bound']} "
+            f"bw_frac={roof['frac_peak_bw']*100:.1f}pct")
+
+    res = {"backend": backend, "schema_version": table["schema_version"],
+           "hw": hw, "cells": cells, "qent_best_speedup": qent_best}
+    common.save_json("BENCH_tune", res)
+
+    bad_bits = [k for k, c in cells.items() if not c["bitequal"]]
+    assert not bad_bits, f"tuned configs changed numerics: {bad_bits}"
+    slow = [k for k, c in cells.items()
+            if c["t_tuned_s"] > c["t_default_s"] * NOISE]
+    assert not slow, (
+        f"tuned config slower than default (> {NOISE}x noise) on: "
+        + ", ".join(f"{k} ({cells[k]['speedup']:.2f}x)" for k in slow))
+    if backend == "cpu":
+        assert qent_best >= QENT_GATE, (
+            f"best CPU qent speedup {qent_best:.2f}x < {QENT_GATE}x -- "
+            "the committed table no longer pays; re-run the tuner")
+    print(f"# tune: {len(cells)} cells bit-equal, "
+          f"best qent {qent_best:.2f}x (gate {QENT_GATE}x on cpu) -- OK")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -27,20 +27,20 @@ def rows():
     return list(_ROWS)
 
 
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5,
+            **kwargs) -> float:
+    """Compile-excluded median seconds per call (kernels.tune.time_fn).
+
+    ``jax.block_until_ready`` on the full result pytree both in warmup
+    (so compile time never leaks into the measurement) and per iter.
+    """
+    from repro.kernels import tune as _tune
+    return _tune.time_fn(fn, *args, warmup=warmup, iters=iters, **kwargs)
+
+
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time per call in microseconds (post-warmup)."""
-    for _ in range(warmup):
-        r = fn(*args)
-        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
-            isinstance(r, jax.Array) else None
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        r = fn(*args)
-        if isinstance(r, jax.Array):
-            r.block_until_ready()
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    return time_fn(fn, *args, warmup=warmup, iters=iters) * 1e6
 
 
 @functools.lru_cache(maxsize=32)

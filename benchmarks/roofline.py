@@ -1,15 +1,25 @@
-"""Roofline analysis from the compiled dry-run artifacts.
+"""Roofline analysis: compiled dry-run artifacts + measured sweep kernels.
 
 Per (arch x shape) on the single-pod production mesh:
-  compute term    = HLO_FLOPs / (chips x 197 TF/s)
-  memory term     = HLO_bytes / (chips x 819 GB/s)
+  compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+  memory term     = HLO_bytes / (chips x peak bytes/s)
   collective term = wire_bytes / (chips x 50 GB/s)
+
+Peaks are keyed on the backend HW table in ``repro.kernels.tune``
+(tpu-v5e: 197 TF/s / 819 GB/s); the CPU entry's bandwidth is *measured*
+on this host with a STREAM-style add (``measured_stream_bw``) so the
+fractions mean something on CI boxes today.
 
 FLOP / byte / collective numbers come from the *unrolled* cost-accounting
 build (``dryrun --unroll``: identical math, no while loops, so XLA cost
 analysis sees every layer); HBM-fit evidence comes from the production
 scan+microbatch build's memory_analysis.  HLO numbers are per-partition
 (SPMD), so terms are already per-chip.
+
+The sweep kernels (gram, qent) get a *measured* roofline: per (kernel,
+shape) cell, achieved bytes/s and FLOP/s from a timed run of the tuned
+configuration vs the backend peaks (``kernel_table``).  bench_tune
+reuses these cost models for its achieved-vs-roofline fractions.
 
 Emits the EXPERIMENTS.md section Roofline table + per-cell bottleneck.
 """
@@ -18,14 +28,109 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, Optional
+import time
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9,
-      "hbm_bytes": 16e9}
+from repro.kernels import tune as KT
+
+# Interconnect + HBM capacity are mesh-level numbers, not in the
+# per-backend kernel table; compute/bandwidth peaks come from it.
+_V5E = KT.BACKEND_HW["tpu-v5e"]
+HW = {"peak_flops": _V5E["peak_flops"], "hbm_bw": _V5E["mem_bw"],
+      "ici_bw": 50e9, "hbm_bytes": 16e9}
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+_STREAM_BW: Optional[float] = None
+
+
+def measured_stream_bw(n: int = 1 << 24, iters: int = 5) -> float:
+    """STREAM-style add bandwidth (bytes/s) on this host: ``a = b + c``
+    over three f64 arrays well past LLC (3 x 128 MB at the default n),
+    best-of-N.  Cached per process."""
+    global _STREAM_BW
+    if _STREAM_BW is None:
+        b, c = np.ones(n), np.ones(n)
+        a = np.empty(n)
+        best = float("inf")
+        for _ in range(max(1, iters)):
+            t0 = time.perf_counter()
+            np.add(b, c, out=a)
+            best = min(best, time.perf_counter() - t0)
+        _STREAM_BW = 3 * 8 * n / best
+    return _STREAM_BW
+
+
+def backend_hw(kind: Optional[str] = None) -> Dict[str, float]:
+    """Roofline peaks for a backend kind.  The CPU entry's nominal
+    bandwidth is replaced with the measured STREAM number."""
+    kind = kind or KT.backend_kind()
+    entry = dict(KT.hw_for(kind), kind=kind)
+    if kind == "cpu":
+        entry["mem_bw"] = measured_stream_bw()
+        entry["mem_bw_source"] = "measured-stream-add"
+    else:
+        entry["mem_bw_source"] = "nominal"
+    return entry
+
+
+# ---------------------------------------------------------------------------
+# Sweep-kernel cost models (bench_tune imports these)
+
+
+def gram_cost(k: int, m: int, n: int) -> Dict[str, float]:
+    """Batched X^T X on a (k, m, n) stack: 2mn^2 FLOPs per slice; the
+    memory floor is one read of X + one write of the (n, n) output."""
+    return {"flops": 2.0 * k * m * n * n,
+            "bytes": 4.0 * k * (m * n + n * n)}
+
+
+def qent_cost(k: int, n: int, bins: int, e: int) -> Dict[str, float]:
+    """Fused quantize+histogram sweep of (k, n) values over e bounds:
+    ~4 ops per element per bound (scale, round, clip, scatter-add); the
+    fused kernel re-reads the tile once per bound and writes one
+    (bins,) histogram per (row, bound)."""
+    return {"flops": 4.0 * k * e * n,
+            "bytes": 4.0 * k * e * (n + bins)}
+
+
+def kernel_cell(name: str, shape: Tuple[int, ...], t_s: float,
+                hw: Dict[str, float]) -> Dict[str, float]:
+    """Achieved-vs-peak fractions for one timed (kernel, shape) cell."""
+    cost = gram_cost(*shape[:3]) if name == "gram" else qent_cost(*shape)
+    flops_s = cost["flops"] / t_s
+    bytes_s = cost["bytes"] / t_s
+    ff = flops_s / hw["peak_flops"]
+    fb = bytes_s / hw["mem_bw"]
+    return {"kernel": name, "shape": list(shape), "time_s": t_s,
+            "achieved_flops_s": flops_s, "achieved_bytes_s": bytes_s,
+            "frac_peak_flops": ff, "frac_peak_bw": fb,
+            "bound": "memory" if fb > ff else "compute"}
+
+
+def kernel_table(iters: int = 3) -> Dict[str, dict]:
+    """Measured roofline for the sweep kernels on this backend: time the
+    tuned configuration (table-resolved) of every full-search cell."""
+    from repro.kernels.gram import ops as gram_ops
+    from repro.kernels.qent import ops as qent_ops
+    hw = backend_hw()
+    out: Dict[str, dict] = {"hw": hw}
+    for k, m, n in KT.FULL_GRAM_CELLS:
+        x = np.asarray(
+            np.random.default_rng(0).standard_normal((k, m, n)), np.float32)
+        t = KT.time_fn(gram_ops.gram_batched, x, iters=iters)
+        out[KT.gram_key(m, n)] = kernel_cell("gram", (k, m, n), t, hw)
+    for k, n, bins, e in KT.FULL_QENT_CELLS:
+        x = np.asarray(
+            np.random.default_rng(1).standard_normal((k, n)), np.float32)
+        epss = np.geomspace(1e-3, 1e-1, e).astype(np.float32)
+        t = KT.time_fn(
+            qent_ops.quantized_entropy_sweep, x, epss, bins, iters=iters)
+        out[KT.qent_key(n, bins)] = kernel_cell(
+            "qent", (k, n, bins, e), t, hw)
+    return out
 
 
 def load(arch: str, shape: str, mesh: str = "single",
@@ -132,7 +237,19 @@ def markdown_table(table: Dict[str, dict]) -> str:
 def main():
     from benchmarks import common
     table = full_table()
-    common.save_json("roofline", table)
+    kernels = kernel_table()
+    for key, c in kernels.items():
+        if key == "hw":
+            continue
+        common.emit(
+            f"roofline/kernel/{key}", c["time_s"] * 1e6,
+            f"bound={c['bound']} "
+            f"bw={c['achieved_bytes_s']/1e9:.2f}GB/s "
+            f"({c['frac_peak_bw']*100:.1f}pct of "
+            f"{kernels['hw']['mem_bw']/1e9:.0f}GB/s "
+            f"{kernels['hw']['mem_bw_source']}) "
+            f"flops={c['frac_peak_flops']*100:.2f}pct of peak")
+    common.save_json("roofline", {**table, "kernels": kernels})
     ok = [t for t in table.values() if t["status"] == "ok"]
     if ok:
         worst = min(ok, key=lambda t: t["mfu_bound"])

@@ -24,6 +24,7 @@ SUITES = [
     ("multihost_fabric", "benchmarks.bench_multihost"),
     ("fault_recovery", "benchmarks.bench_fault"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("tune", "benchmarks.bench_tune"),
     ("roofline", "benchmarks.roofline"),
 ]
 

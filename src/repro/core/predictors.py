@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 
+from repro.kernels import tune as KT
 from repro.quant import (INT32_CODE_MIN, INT32_CODE_MAX,
                          validate_eps_positive as _validate_eps_positive)
 
@@ -41,6 +42,7 @@ def svd_trunc(
     x: jnp.ndarray,
     variance_fraction: float = DEFAULT_VARIANCE_FRACTION_2D,
     use_kernel: bool = False,
+    tune: KT.TuneConfig | None = None,
 ) -> jnp.ndarray:
     """Fraction of singular values needed to capture ``variance_fraction``
     of the total variance of the mean-corrected 2-D slice ``x``.
@@ -50,7 +52,8 @@ def svd_trunc(
     """
     if x.ndim != 2:
         raise ValueError(f"svd_trunc expects a 2-D slice, got shape {x.shape}")
-    return svd_trunc_batch(x[None], variance_fraction, use_kernel=use_kernel)[0]
+    return svd_trunc_batch(x[None], variance_fraction, use_kernel=use_kernel,
+                           tune=tune)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +71,7 @@ def hosvd_trunc_batch(
     vols: jnp.ndarray,
     variance_fraction: float = DEFAULT_VARIANCE_FRACTION_3D,
     use_kernel: bool = False,
+    tune: KT.TuneConfig | None = None,
 ) -> jnp.ndarray:
     """``hosvd_trunc`` for a (k, d, m, n) stack of volumes (any rank >= 4):
     per-mode unfoldings computed as ONE batched Gram + batched ``eigvalsh``
@@ -91,7 +95,7 @@ def hosvd_trunc_batch(
         _, p, q = u.shape
         if use_kernel:
             from repro.kernels.gram import ops as gram_ops
-            g = gram_ops.gram_batched(u, transpose=p >= q)
+            g = gram_ops.gram_batched(u, transpose=p >= q, tune=tune)
         else:
             g = (jnp.einsum("kai,kaj->kij", u, u) if p >= q
                  else jnp.einsum("kia,kja->kij", u, u))
@@ -108,6 +112,7 @@ def hosvd_trunc(
     x: jnp.ndarray,
     variance_fraction: float = DEFAULT_VARIANCE_FRACTION_3D,
     use_kernel: bool = False,
+    tune: KT.TuneConfig | None = None,
 ) -> jnp.ndarray:
     """HOSVD-based truncation statistic for an N-D tensor (paper section 3.1.2).
 
@@ -119,7 +124,7 @@ def hosvd_trunc(
     if x.ndim < 3:
         raise ValueError(f"hosvd_trunc expects >=3-D tensor, got {x.shape}")
     return hosvd_trunc_batch(x[None], variance_fraction,
-                             use_kernel=use_kernel)[0]
+                             use_kernel=use_kernel, tune=tune)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +154,7 @@ def quantized_entropy(
     eps: float,
     num_bins: int = 65536,
     use_kernel: bool = False,
+    tune: KT.TuneConfig | None = None,
 ) -> jnp.ndarray:
     """Shannon entropy (bits/symbol) of the linearly quantized data.
 
@@ -162,7 +168,7 @@ def quantized_entropy(
     codes = quantized_codes(x, eps)
     if use_kernel:
         from repro.kernels.qent import ops as qent_ops
-        return qent_ops.quantized_entropy(x, eps, num_bins=num_bins)
+        return qent_ops.quantized_entropy(x, eps, num_bins=num_bins, tune=tune)
     lo = jnp.min(codes)
     shifted = (codes - lo) % num_bins
     counts = jnp.zeros((num_bins,), jnp.int32).at[shifted].add(1)
@@ -188,6 +194,10 @@ class PredictorConfig:
     variance_fraction_3d: float = DEFAULT_VARIANCE_FRACTION_3D
     qent_bins: int = 65536
     use_kernels: bool = False  # route hot spots through Pallas kernels
+    # kernel tile policy: defaults consult the backend's tuned table
+    # (kernels/tuned/<backend>.json); frozen+hashable so it rides jit
+    # static args and the serving layer's executable signatures
+    tune: KT.TuneConfig = KT.TuneConfig()
 
 
 def features_2d(x: jnp.ndarray, eps: float, cfg: PredictorConfig = PredictorConfig()) -> jnp.ndarray:
@@ -195,8 +205,10 @@ def features_2d(x: jnp.ndarray, eps: float, cfg: PredictorConfig = PredictorConf
     ``[log(q_ent), log(svd_trunc / sigma)]`` (both standardized downstream).
     """
     sigma = jnp.std(x.astype(jnp.float32))
-    sv = svd_trunc(x, cfg.variance_fraction_2d, use_kernel=cfg.use_kernels)
-    qe = quantized_entropy(x, eps, cfg.qent_bins, use_kernel=cfg.use_kernels)
+    sv = svd_trunc(x, cfg.variance_fraction_2d, use_kernel=cfg.use_kernels,
+                   tune=cfg.tune)
+    qe = quantized_entropy(x, eps, cfg.qent_bins, use_kernel=cfg.use_kernels,
+                           tune=cfg.tune)
     # Guard logs: q-ent can be 0 (all values in one bin) and sigma can be 0.
     log_qe = jnp.log(jnp.maximum(qe, 1e-3))
     log_ratio = jnp.log(jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
@@ -205,8 +217,10 @@ def features_2d(x: jnp.ndarray, eps: float, cfg: PredictorConfig = PredictorConf
 
 def features_3d(x: jnp.ndarray, eps: float, cfg: PredictorConfig = PredictorConfig()) -> jnp.ndarray:
     sigma = jnp.std(x.astype(jnp.float32))
-    sv = hosvd_trunc(x, cfg.variance_fraction_3d, use_kernel=cfg.use_kernels)
-    qe = quantized_entropy(x, eps, cfg.qent_bins, use_kernel=cfg.use_kernels)
+    sv = hosvd_trunc(x, cfg.variance_fraction_3d, use_kernel=cfg.use_kernels,
+                     tune=cfg.tune)
+    qe = quantized_entropy(x, eps, cfg.qent_bins, use_kernel=cfg.use_kernels,
+                           tune=cfg.tune)
     log_qe = jnp.log(jnp.maximum(qe, 1e-3))
     log_ratio = jnp.log(jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
     return jnp.stack([log_qe, log_ratio])
@@ -234,6 +248,7 @@ def svd_trunc_batch(
     slices: jnp.ndarray,
     variance_fraction: float = DEFAULT_VARIANCE_FRACTION_2D,
     use_kernel: bool = False,
+    tune: KT.TuneConfig | None = None,
 ) -> jnp.ndarray:
     """svd_trunc for a (k, m, n) stack in one batched Gram + eigvalsh."""
     if slices.ndim != 3:
@@ -243,7 +258,7 @@ def svd_trunc_batch(
     _, m, n = x.shape
     if use_kernel:
         from repro.kernels.gram import ops as gram_ops
-        g = gram_ops.gram_batched(x, transpose=m >= n)
+        g = gram_ops.gram_batched(x, transpose=m >= n, tune=tune)
     else:
         g = (jnp.einsum("kai,kaj->kij", x, x) if m >= n
              else jnp.einsum("kia,kja->kij", x, x))
@@ -277,6 +292,7 @@ def quantized_entropy_sweep(
     epss: jnp.ndarray,
     num_bins: int = 65536,
     use_kernel: bool = False,
+    tune: KT.TuneConfig | None = None,
 ) -> jnp.ndarray:
     """q-ent of a (k, ...) stack at an (e,) eb vector -> (k, e), reading
     the data once.
@@ -295,7 +311,8 @@ def quantized_entropy_sweep(
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
     if use_kernel:
         from repro.kernels.qent import ops as qent_ops
-        return qent_ops.quantized_entropy_sweep(flat, epss, num_bins=num_bins)
+        return qent_ops.quantized_entropy_sweep(flat, epss, num_bins=num_bins,
+                                                tune=tune)
     n = flat.shape[1]
     xs = _sort_f32_fast(flat)                         # once, shared by all ebs
     iota = jnp.arange(n)
@@ -329,7 +346,7 @@ def variance_fraction_for(cfg: PredictorConfig, stack_ndim: int) -> float:
             else cfg.variance_fraction_3d)
 
 
-def _features_sweep_impl(slices, epss, *, vf, bins, use_kernels):
+def _features_sweep_impl(slices, epss, *, vf, bins, use_kernels, tune=None):
     """Pure sweep body: (k, m, n) | (k, d, m, n) x (e,) -> (k, e, 2).
 
     Rank-dispatching: rank-3 stacks run the batched 2-D SVD predictor,
@@ -342,18 +359,29 @@ def _features_sweep_impl(slices, epss, *, vf, bins, use_kernels):
     x = slices.astype(jnp.float32)
     sigma = jnp.std(x, axis=tuple(range(1, x.ndim)))
     if x.ndim == 3:
-        sv = svd_trunc_batch(x, vf, use_kernel=use_kernels)
+        sv = svd_trunc_batch(x, vf, use_kernel=use_kernels, tune=tune)
     else:
-        sv = hosvd_trunc_batch(x, vf, use_kernel=use_kernels)
+        sv = hosvd_trunc_batch(x, vf, use_kernel=use_kernels, tune=tune)
     log_ratio = jnp.log(jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
-    qe = quantized_entropy_sweep(x, epss, bins, use_kernel=use_kernels)
+    qe = quantized_entropy_sweep(x, epss, bins, use_kernel=use_kernels,
+                                 tune=tune)
     log_qe = jnp.log(jnp.maximum(qe, 1e-3))                 # (k, e)
     return jnp.stack(
         [log_qe, jnp.broadcast_to(log_ratio[:, None], log_qe.shape)], axis=-1)
 
 
 _features_sweep_traced = jax.jit(
-    _features_sweep_impl, static_argnames=("vf", "bins", "use_kernels"))
+    _features_sweep_impl,
+    static_argnames=("vf", "bins", "use_kernels", "tune"))
+
+# zero-copy variant for the serving hot path: the caller hands over the
+# (padded) input stack and XLA may reuse its buffer for intermediates.
+# Identical computation -- donation changes buffer lifetime, not math --
+# so it shares _features_sweep_impl and tests assert bit-equality.
+_features_sweep_donated = jax.jit(
+    _features_sweep_impl,
+    static_argnames=("vf", "bins", "use_kernels", "tune"),
+    donate_argnums=(0,))
 
 
 def features_sweep(
@@ -408,20 +436,22 @@ def features_sweep(
                 slices, epss, cfg, mesh=use_mesh, gather=gather)
     return _features_sweep_traced(
         slices, epss, vf=variance_fraction_for(cfg, slices.ndim),
-        bins=cfg.qent_bins, use_kernels=cfg.use_kernels)
+        bins=cfg.qent_bins, use_kernels=cfg.use_kernels, tune=cfg.tune)
 
 
-@functools.partial(jax.jit, static_argnames=("bins", "use_kernels"))
-def _qent_sweep_traced(x, epss, *, bins, use_kernels):
-    return quantized_entropy_sweep(x[None], epss, bins, use_kernel=use_kernels)[0]
+@functools.partial(jax.jit, static_argnames=("bins", "use_kernels", "tune"))
+def _qent_sweep_traced(x, epss, *, bins, use_kernels, tune=None):
+    return quantized_entropy_sweep(x[None], epss, bins, use_kernel=use_kernels,
+                                   tune=tune)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("vf", "use_kernels"))
-def _svd_sigma_traced(x, *, vf, use_kernels):
+@functools.partial(jax.jit, static_argnames=("vf", "use_kernels", "tune"))
+def _svd_sigma_traced(x, *, vf, use_kernels, tune=None):
     if x.ndim == 2:
-        sv = svd_trunc_batch(x[None], vf, use_kernel=use_kernels)[0]
+        sv = svd_trunc_batch(x[None], vf, use_kernel=use_kernels, tune=tune)[0]
     else:
-        sv = hosvd_trunc_batch(x[None], vf, use_kernel=use_kernels)[0]
+        sv = hosvd_trunc_batch(x[None], vf, use_kernel=use_kernels,
+                               tune=tune)[0]
     return sv, jnp.std(x.astype(jnp.float32))
 
 
@@ -449,7 +479,7 @@ class SliceCache:
             sv, sigma = _svd_sigma_traced(
                 self._x,
                 vf=variance_fraction_for(self._cfg, self._x.ndim + 1),
-                use_kernels=self._cfg.use_kernels)
+                use_kernels=self._cfg.use_kernels, tune=self._cfg.tune)
             self._log_ratio = jnp.log(
                 jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
         return self._log_ratio
@@ -487,7 +517,7 @@ class SliceCache:
             qe = _qent_sweep_traced(
                 self._x, jnp.asarray([key], jnp.float32),
                 bins=self._cfg.qent_bins,
-                use_kernels=self._cfg.use_kernels)[0]
+                use_kernels=self._cfg.use_kernels, tune=self._cfg.tune)[0]
             self._memo[key] = jnp.stack(
                 [jnp.log(jnp.maximum(qe, 1e-3)), self._ratio()])
         return self._memo[key]

@@ -258,7 +258,8 @@ def _pad_block(block: np.ndarray, per: int, shape_tail: tuple,
 
 
 def _features_sweep_multihost(slices, epss, cfg, mesh: Mesh, gather: bool,
-                              process_local: bool, global_k: Optional[int]):
+                              process_local: bool, global_k: Optional[int],
+                              donate: bool = False):
     """Process-spanning sweep launch (see module docstring): per-process
     ingestion -> one collective shard_map -> ``process_allgather``."""
     from repro.core import predictors as PRED
@@ -299,7 +300,10 @@ def _features_sweep_multihost(slices, epss, cfg, mesh: Mesh, gather: bool,
     out = _sharded_sweep_fn(
         mesh, axes, host.ndim,
         PRED.variance_fraction_for(cfg, host.ndim), cfg.qent_bins,
-        cfg.use_kernels)(garr, eps_g)
+        cfg.use_kernels, cfg.tune,
+        # garr is assembled fresh from host memory every launch, so
+        # donating it back to XLA is always safe here
+        donate)(garr, eps_g)
 
     if gather:
         return jnp.asarray(gather_rows(out)[:k])
@@ -311,12 +315,14 @@ def _features_sweep_multihost(slices, epss, cfg, mesh: Mesh, gather: bool,
 
 @functools.lru_cache(maxsize=32)
 def _sharded_sweep_fn(mesh: Mesh, axes: tuple, rank: int, vf: float,
-                      bins: int, use_kernels: bool):
+                      bins: int, use_kernels: bool, tune=None,
+                      donate: bool = False):
     """jit'd shard_map sweep for one (mesh, stack rank, config); cached so
     repeated sweeps (serving, training grids) reuse the compiled
     executable.  ``rank`` is the stack's ndim: 3 for (k, m, n) slice
     stacks, 4 for (k, d, m, n) volume stacks -- only dim 0 is sharded
-    either way."""
+    either way.  ``donate=True`` compiles a variant that donates the
+    input stack's buffer (identical math; serving hot path)."""
     from repro.core import predictors as PRED
 
     part = axes[0] if len(axes) == 1 else axes
@@ -325,14 +331,15 @@ def _sharded_sweep_fn(mesh: Mesh, axes: tuple, rank: int, vf: float,
         # each device featurizes its (k_local, ...) shard with the exact
         # single-device sweep body: sharded == single-device to f32 tol
         return PRED._features_sweep_impl(
-            local_slices, epss, vf=vf, bins=bins, use_kernels=use_kernels)
+            local_slices, epss, vf=vf, bins=bins, use_kernels=use_kernels,
+            tune=tune)
 
     f = S.shard_map(
         body, mesh=mesh,
         in_specs=(P(part, *([None] * (rank - 1))), P(None)),
         out_specs=P(part, None, None),
         axis_names=frozenset(axes))
-    return jax.jit(f)
+    return jax.jit(f, donate_argnums=(0,) if donate else ())
 
 
 def features_sweep_sharded(
@@ -344,6 +351,7 @@ def features_sweep_sharded(
     gather: bool = True,
     process_local: bool = False,
     global_k: Optional[int] = None,
+    donate: bool = False,
 ) -> jnp.ndarray:
     """``features_sweep`` sharded over the slice axis of ``mesh``.
 
@@ -363,6 +371,12 @@ def features_sweep_sharded(
 
     Falls back to the single-device engine when no mesh (or an extent-1
     mesh) is available, so callers can route unconditionally.
+
+    ``donate=True`` donates the input stack's device buffer to the
+    launch (zero-copy serving hot path).  The result is bit-identical;
+    the caller's ``slices`` array is consumed and must not be reused
+    (numpy inputs are unaffected -- only their fresh device upload is
+    donated).
     """
     from repro.core import predictors as PRED
     cfg = cfg if cfg is not None else PRED.PredictorConfig()
@@ -380,7 +394,7 @@ def features_sweep_sharded(
     PRED._validate_eps_positive(epss)
     if mesh_spans_processes(mesh):
         return _features_sweep_multihost(
-            slices, epss, cfg, mesh, gather, process_local, global_k)
+            slices, epss, cfg, mesh, gather, process_local, global_k, donate)
     if process_local:
         raise ValueError(
             "process_local=True is only meaningful on a process-spanning "
@@ -393,15 +407,17 @@ def features_sweep_sharded(
     pad = (-k) % ext
     if pad:
         # pad with the last slice (real data: keeps the eigensolve and the
-        # q-ent sort on the padded rows numerically unexceptional)
+        # q-ent sort on the padded rows numerically unexceptional); the
+        # concat result is owned here, so its buffer is donatable
         slices = jnp.concatenate(
             [slices, jnp.broadcast_to(slices[-1:], (pad,) + slices.shape[1:])],
             axis=0)
+        donate = True
 
     out = _sharded_sweep_fn(
         mesh, axes, slices.ndim,
         PRED.variance_fraction_for(cfg, slices.ndim), cfg.qent_bins,
-        cfg.use_kernels)(slices, epss)
+        cfg.use_kernels, cfg.tune, donate)(slices, epss)
 
     if gather:
         out = out[:k]                                   # drop pad rows
@@ -424,6 +440,7 @@ def sweep_padded(
     *,
     k_pad: Optional[int] = None,
     mesh: Optional[Mesh] = None,
+    donate: bool = False,
 ) -> jnp.ndarray:
     """One coalesced sweep launch over a padded request batch.
 
@@ -452,6 +469,13 @@ def sweep_padded(
     scatters only real rows back to requests (``scatter_requests``).
     Every kept row is bit-identical to a single-request launch of that
     slice because the sweep body is row-independent.
+
+    ``donate=True`` donates the stack's device buffer to the launch (the
+    sweep service always passes it: the packed batch is service-owned
+    staging memory).  When padding happens here the padded copy is owned
+    and donated regardless.  Donation never changes the result -- only
+    buffer lifetime -- and donated launches are asserted bit-equal to
+    non-donated ones in tests/test_tune.py.
     """
     from repro.core import predictors as PRED
     cfg = cfg if cfg is not None else PRED.PredictorConfig()
@@ -469,16 +493,19 @@ def sweep_padded(
             [slices,
              jnp.broadcast_to(slices[-1:], (k_pad - k,) + slices.shape[1:])],
             axis=0)
+        donate = True            # the padded copy is owned here
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
     mesh = active_sweep_mesh(mesh)
     if mesh is not None:
         ext = S._mesh_extent(mesh, slice_axes(mesh))
         if k_pad >= ext and k_pad % ext == 0:
             return features_sweep_sharded(
-                slices, epss, cfg, mesh=mesh, gather=False)
-    return PRED._features_sweep_traced(
+                slices, epss, cfg, mesh=mesh, gather=False, donate=donate)
+    fn = (PRED._features_sweep_donated if donate
+          else PRED._features_sweep_traced)
+    return fn(
         slices, epss, vf=PRED.variance_fraction_for(cfg, slices.ndim),
-        bins=cfg.qent_bins, use_kernels=cfg.use_kernels)
+        bins=cfg.qent_bins, use_kernels=cfg.use_kernels, tune=cfg.tune)
 
 
 def scatter_requests(out, sizes: Sequence[int]) -> list:

@@ -1,8 +1,11 @@
 """jit'd public wrapper for the Gram kernel (handles padding + transpose)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from repro.kernels import tune as _tune
 from repro.kernels.gram import gram as _k
 
 
@@ -11,18 +14,25 @@ def _pad_to(x: jnp.ndarray, mult_m: int, mult_n: int) -> jnp.ndarray:
     return jnp.pad(x, ((0, (-m) % mult_m), (0, (-n) % mult_n)))
 
 
-def gram(x: jnp.ndarray, transpose: bool = True) -> jnp.ndarray:
+def gram(x: jnp.ndarray, transpose: bool = True, *,
+         bn: Optional[int] = None, bk: Optional[int] = None,
+         tune: Optional[_tune.TuneConfig] = None) -> jnp.ndarray:
     """Gram matrix of the smaller side; zero padding is exact for X^T X.
 
     transpose=True  -> X^T X  (n x n)
     transpose=False -> X X^T  (m x m)  (computed as (X^T)^T (X^T))
+
+    Block sizes resolve via the tuned table (explicit ``bn``/``bk`` >
+    ``tune`` fields > table cell > kernel defaults); zero-padding to the
+    resolved multiples keeps every choice exact for the top-left block.
     """
     x = x.astype(jnp.float32)
     if not transpose:
         x = x.T
-    n = x.shape[1]
-    xp = _pad_to(x, _k.DEFAULT_BK, _k.DEFAULT_BN)
-    g = _k.gram_xtx(xp)
+    m, n = x.shape
+    bn, bk = _tune.gram_blocks(m, n, tune, bn=bn, bk=bk)
+    xp = _pad_to(x, bk, bn)
+    g = _k.gram_xtx(xp, bn=bn, bk=bk)
     return g[:n, :n]
 
 
@@ -31,16 +41,21 @@ def _pad_to_batched(x: jnp.ndarray, mult_m: int, mult_n: int) -> jnp.ndarray:
     return jnp.pad(x, ((0, 0), (0, (-m) % mult_m), (0, (-n) % mult_n)))
 
 
-def gram_batched(x: jnp.ndarray, transpose: bool = True) -> jnp.ndarray:
+def gram_batched(x: jnp.ndarray, transpose: bool = True, *,
+                 bn: Optional[int] = None, bk: Optional[int] = None,
+                 tune: Optional[_tune.TuneConfig] = None) -> jnp.ndarray:
     """Batched Gram over a (k, m, n) stack of slices in one kernel launch.
 
     transpose=True  -> X^T X per slice: (k, n, n)
     transpose=False -> X X^T per slice: (k, m, m)
+
+    Block-size resolution matches :func:`gram`.
     """
     x = x.astype(jnp.float32)
     if not transpose:
         x = jnp.swapaxes(x, 1, 2)
-    n = x.shape[2]
-    xp = _pad_to_batched(x, _k.DEFAULT_BK, _k.DEFAULT_BN)
-    g = _k.gram_xtx_batched(xp)
+    _, m, n = x.shape
+    bn, bk = _tune.gram_blocks(m, n, tune, bn=bn, bk=bk)
+    xp = _pad_to_batched(x, bk, bn)
+    g = _k.gram_xtx_batched(xp, bn=bn, bk=bk)
     return g[:, :n, :n]

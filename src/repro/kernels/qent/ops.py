@@ -1,8 +1,11 @@
 """jit'd public wrappers for the qent kernel (padding + entropy reduction)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
+from repro.kernels import tune as _tune
 from repro.kernels.qent import qent as _k
 from repro.kernels.qent import ref as _ref
 from repro.quant import validate_eps_positive as _check_eps
@@ -12,6 +15,9 @@ def quantized_entropy_sweep(
     x: jnp.ndarray,
     epss: jnp.ndarray,
     num_bins: int = _k.DEFAULT_BINS,
+    *,
+    tile: Optional[int] = None,
+    tune: Optional[_tune.TuneConfig] = None,
 ) -> jnp.ndarray:
     """Entropies for a stack of slices at a vector of error bounds.
 
@@ -20,6 +26,10 @@ def quantized_entropy_sweep(
     launch that reads each input tile once.  Per-slice padding reuses the
     slice's own first element (so the pad lands in an existing bin) and
     its count is subtracted from that bin per eps afterwards.
+
+    The kernel tile resolves via the tuned table (explicit ``tile`` >
+    ``tune.qent_tile`` > table cell > ``DEFAULT_TILE``); the histogram
+    accumulation is integer, so every tile choice is bit-exact.
     """
     _check_eps(epss)
     k = x.shape[0]
@@ -27,13 +37,15 @@ def quantized_entropy_sweep(
     epss = jnp.asarray(epss, jnp.float32).reshape(-1)
     e = epss.shape[0]
     n = flat.shape[1]
-    pad = (-n) % _k.DEFAULT_TILE
+    tile = _tune.qent_tile(n, num_bins, tune, tile=tile)
+    pad = (-n) % tile
     if pad:
         flat_p = jnp.concatenate(
             [flat, jnp.broadcast_to(flat[:, :1], (k, pad))], axis=1)
     else:
         flat_p = flat
-    hist = _k.qent_histogram_sweep(flat_p, epss, bins=num_bins)  # (k, e, B)
+    hist = _k.qent_histogram_sweep(flat_p, epss, tile=tile,
+                                   bins=num_bins)  # (k, e, B)
     if pad:
         first_code = jnp.clip(               # same saturation as the kernel
             jnp.floor(flat[:, :1] / epss[None, :]),
@@ -44,8 +56,11 @@ def quantized_entropy_sweep(
     return _ref.entropy_bits_rows(hist)
 
 
-def quantized_entropy(x: jnp.ndarray, eps, num_bins: int = _k.DEFAULT_BINS) -> jnp.ndarray:
+def quantized_entropy(x: jnp.ndarray, eps, num_bins: int = _k.DEFAULT_BINS,
+                      *, tile: Optional[int] = None,
+                      tune: Optional[_tune.TuneConfig] = None) -> jnp.ndarray:
     """Entropy (bits/symbol) of one slice at one eps: the (k=1, e=1) case
     of the fused sweep (single implementation of the padding logic)."""
     return quantized_entropy_sweep(
-        x.reshape(1, -1), jnp.asarray([eps], jnp.float32), num_bins)[0, 0]
+        x.reshape(1, -1), jnp.asarray([eps], jnp.float32), num_bins,
+        tile=tile, tune=tune)[0, 0]

@@ -39,12 +39,22 @@ from repro.quant import INT32_CODE_MIN, INT32_CODE_MAX
 DEFAULT_TILE = 2048
 DEFAULT_BINS = 4096
 
-# per-sublane compare budget when lowering for real TPU hardware: the
-# (tile/8, bins) int32 one-hot must leave room in ~16 MB of VMEM
+# fallback per-sublane compare budget (half of a conservative 16 MB
+# VMEM); at trace time the budget is resolved per backend generation
+# from tune.BACKEND_HW so 128 MB-VMEM parts stop over-shrinking tiles
 _VMEM_COMPARE_BUDGET = 8 * 1024 * 1024
 
 
-def _fit_tile(tile: int, bins: int, interpret: bool) -> int:
+def _compare_budget() -> int:
+    from repro.kernels import tune
+    try:
+        return tune.vmem_compare_budget()
+    except Exception:          # backend probe failed: conservative default
+        return _VMEM_COMPARE_BUDGET
+
+
+def _fit_tile(tile: int, bins: int, interpret: bool,
+              budget: int | None = None) -> int:
     """Shrink the tile until the per-sublane compare fits VMEM (TPU only).
 
     Any divisor of the original tile still divides the padded input
@@ -52,13 +62,14 @@ def _fit_tile(tile: int, bins: int, interpret: bool) -> int:
     """
     if interpret:
         return tile
-    while tile > 8 and tile % 2 == 0 and (tile // 8) * bins * 4 > _VMEM_COMPARE_BUDGET:
+    budget = _compare_budget() if budget is None else budget
+    while tile > 8 and tile % 2 == 0 and (tile // 8) * bins * 4 > budget:
         tile //= 2
-    if (tile // 8) * bins * 4 > _VMEM_COMPARE_BUDGET:
+    if (tile // 8) * bins * 4 > budget:
         raise ValueError(
             f"qent kernel compare tile (tile/8={tile // 8}, bins={bins}) "
-            f"exceeds the {_VMEM_COMPARE_BUDGET}-byte VMEM budget even at "
-            f"the minimum tile; use bins <= {_VMEM_COMPARE_BUDGET // 4}")
+            f"exceeds the {budget}-byte VMEM budget even at "
+            f"the minimum tile; use bins <= {budget // 4}")
     return tile
 
 

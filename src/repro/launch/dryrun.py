@@ -1,6 +1,15 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+
+from repro.launch import xla_flags as XF
+
+# Dedup-merged (NOT concatenated: the old string concat silently clobbered
+# the ordering of user-exported flags).  Later sources win, so a user's
+# exported XLA_FLAGS overrides both the 512-device default and any
+# _REPRO_EXTRA_XLA additions.  Must run before the jax import below.
+os.environ["XLA_FLAGS"] = XF.merge_flag_strings(
+    "--xla_force_host_platform_device_count=512",
+    os.environ.get("_REPRO_EXTRA_XLA", ""),
+    os.environ.get("XLA_FLAGS", ""))
 
 """Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
 

@@ -178,9 +178,13 @@ def make_sweep_mesh(num_devices: int | None = None):
 
 
 # TPU v5e hardware model used by the roofline analysis (per chip).
+# Compute/bandwidth peaks live in the backend-keyed kernels.tune table;
+# interconnect and HBM capacity are mesh-level concerns kept here.
+from repro.kernels.tune import BACKEND_HW as _BHW  # noqa: E402
+
 HW = {
-    "peak_flops_bf16": 197e12,     # FLOP/s
-    "hbm_bw": 819e9,               # bytes/s
+    "peak_flops_bf16": _BHW["tpu-v5e"]["peak_flops"],   # FLOP/s
+    "hbm_bw": _BHW["tpu-v5e"]["mem_bw"],                # bytes/s
     "ici_bw": 50e9,                # bytes/s per link
     "hbm_bytes": 16e9,             # capacity
 }

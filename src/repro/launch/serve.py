@@ -12,13 +12,7 @@ repeated KV blocks ride the cross-request cache.
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import get_arch, get_smoke
-from repro.dist import sharding as S
-from repro.serve.engine import Engine, ServeConfig
-from repro.train import train_step as TS
+from repro.launch import xla_flags as XF
 
 
 def main():
@@ -35,7 +29,25 @@ def main():
                          "shared sweep service (kv_gate method) instead "
                          "of the engine's private jit")
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--xla-preset", default=None,
+                    choices=sorted(XF.PRESETS),
+                    help="apply a curated per-backend XLA_FLAGS preset "
+                         "(launch.xla_flags) before jax initializes; "
+                         "user-exported XLA_FLAGS still win on conflicts")
     args = ap.parse_args()
+
+    if args.xla_preset:
+        XF.apply_preset(args.xla_preset)
+
+    # deferred so --xla-preset lands before the first jax import reads
+    # XLA_FLAGS
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_arch, get_smoke
+    from repro.dist import sharding as S
+    from repro.serve.engine import Engine, ServeConfig
+    from repro.train import train_step as TS
 
     cfg = get_smoke(args.arch) if args.smoke else get_arch(args.arch)
     params = TS.init_state(cfg, jax.random.PRNGKey(0)).params

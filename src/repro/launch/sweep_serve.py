@@ -104,7 +104,18 @@ def main():
     ap.add_argument("--chaos", default=None, metavar="SPEC",
                     help="arm repro.dist.faultinject on this process, "
                          "e.g. follower_launch:kill:2")
+    from repro.launch import xla_flags as XF
+    ap.add_argument("--xla-preset", default=None,
+                    choices=sorted(XF.PRESETS),
+                    help="apply a curated per-backend XLA_FLAGS preset "
+                         "(launch.xla_flags) before jax initializes; "
+                         "user-exported XLA_FLAGS still win on conflicts")
     args = ap.parse_args()
+
+    if args.xla_preset:
+        # must precede the mesh import below -- that is the first jax
+        # import of this process, where XLA_FLAGS is read
+        XF.apply_preset(args.xla_preset)
 
     from repro.launch import mesh as M
     if args.coordinator_only:

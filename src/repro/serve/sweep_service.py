@@ -387,6 +387,12 @@ class SweepService:
         self._batches = 0
         self._requests = collections.Counter()
         self._executables: set = set()   # (mesh, launcher, k_pad, shape, ...)
+        # pinned host staging buffers, keyed by padded stack shape: the
+        # worker packs each coalesced batch into a re-used buffer instead
+        # of np.stack-allocating per launch, so steady-state serving of a
+        # warm bucket allocates nothing host-side per batch (the launch
+        # donates the staged upload device-side; see SweepLauncher)
+        self._staging: Dict[Tuple[int, ...], np.ndarray] = {}
         self._fabric_error: Optional[BaseException] = None
         # adaptive micro-batch window (module docstring): starts at the
         # ceiling, halves on loaded flushes, grows back when idle
@@ -1454,9 +1460,27 @@ class SweepService:
                 local: Dict[Tuple[tuple, float], np.ndarray]) -> None:
         digests = group["items"]
         order = list(digests)
-        stack = np.stack([digests[key][0] for key in order])
         k = len(order)
         k_pad = self._k_pad(group["methods"], k)
+        # pack the batch into the pinned staging buffer for its padded
+        # shape (allocated once per warm bucket, then re-used: _launch
+        # runs on the single worker thread and scatter_requests below
+        # blocks until the device has consumed the upload, so the next
+        # batch can safely refill it).  Pad rows repeat the last real row
+        # -- byte-identical to the pad sweep_padded would synthesize.
+        trailing = digests[order[0]][0].shape
+        buf = self._staging.get((k_pad,) + trailing)
+        if buf is None:
+            buf = np.empty((k_pad,) + trailing, np.float32)
+            self._staging[(k_pad,) + trailing] = buf
+        for i, key in enumerate(order):
+            buf[i] = digests[key][0]
+        buf[k:] = buf[k - 1]
+        # the collective fabric broadcasts the true-k rows (the follower
+        # protocol allocates from the real row count); the local path
+        # hands the launcher the whole pre-padded buffer so no per-batch
+        # device-side pad concat happens either
+        stack = buf[:k] if self._multiproc else buf
         e_pad = launcher.eps_bucket(len(eps_chunk))
         epss = np.asarray(
             eps_chunk + [eps_chunk[-1]] * (e_pad - len(eps_chunk)),

@@ -111,6 +111,27 @@ def test_method_platform_modules_expose_documented_api():
         "featurize", "find_eb", "best_compressor", "kv_gate")
 
 
+def test_performance_doc_references_real_code():
+    perf = _read("docs", "performance.md")
+    for sym in ("repro.kernels.tune", "TuneConfig", "REPRO_TUNED_DIR",
+                "--xla-preset", "bench_tune", "BENCH_tune",
+                "measured_stream_bw", "BACKEND_HW",
+                "vmem_compare_budget", "invalidate_table_cache",
+                "apply_preset", "merge_flag_strings", "donate_argnums"):
+        assert sym in perf, f"performance.md lost {sym}"
+    # the knobs/presets the doc teaches must exist
+    from repro.kernels import tune as KT
+    from repro.launch import xla_flags as XF
+    for name in ("cpu", "tpu", "gpu", "none"):
+        assert name in XF.PRESETS
+    assert hasattr(KT.TuneConfig(), "use_table")
+    # the committed baseline the doc (and the default load path) relies on
+    assert os.path.exists(os.path.join(
+        ROOT, "src", "repro", "kernels", "tuned", "cpu.json"))
+    # README links the doc
+    assert "docs/performance.md" in _read("README.md")
+
+
 def test_paper_mapping_paths_exist():
     mapping = _read("docs", "paper_mapping.md")
     for path in re.findall(r"`((?:core|kernels|dist|serve|launch|data|"
