@@ -21,6 +21,7 @@ SUITES = [
     ("table5_prior", "benchmarks.bench_prior"),
     ("fig10_usecases", "benchmarks.bench_usecases"),
     ("serve_methods_coalescing", "benchmarks.bench_serve"),
+    ("stream_advisor", "benchmarks.bench_stream"),
     ("multihost_fabric", "benchmarks.bench_multihost"),
     ("fault_recovery", "benchmarks.bench_fault"),
     ("kernels", "benchmarks.bench_kernels"),

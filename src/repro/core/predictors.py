@@ -572,6 +572,16 @@ class FeaturizationEngine:
                  sharded: bool | None = None, mesh=None) -> jnp.ndarray:
         return self.sweep(slices, [eps], sharded=sharded, mesh=mesh)[:, 0, :]
 
+    def stream(self, source, name: str, epss, *, stream=None, mesh=None,
+               digest=None):
+        """Out-of-core sweep of one :class:`repro.data.source.
+        DatasetSource` variable: chunked, double-buffered, bit-equal to
+        ``sweep(source.read(name), epss)`` with at most one budgeted
+        chunk resident (see ``repro.core.stream.stream_features``)."""
+        from repro.core import stream as ST
+        return ST.stream_features(source, name, epss, self.cfg,
+                                  stream=stream, mesh=mesh, digest=digest)
+
     def cached(self, x: jnp.ndarray, *, features=None, epss=None) -> SliceCache:
         """Per-slice cache; ``features``/``epss`` pre-seed it with
         externally supplied feature rows (see :meth:`SliceCache.seed`) so

@@ -1,0 +1,438 @@
+"""Out-of-core dataset sources: named variables -> fixed-budget chunks.
+
+Every sweep entry point in this repo used to require the caller to hand
+over a fully materialized in-memory ``(k, ...)`` array stack; real
+scientific archives are multi-variable files far larger than device
+memory.  This module is the ingestion half of the streaming refactor:
+a :class:`DatasetSource` names its variables and serves any contiguous
+row range of each one on demand, and :meth:`DatasetSource.chunks` turns
+a variable into an iterator of fixed-budget row/slab chunks sized so no
+chunk ever exceeds a caller-chosen byte budget.  The incremental sweep
+driver (``repro.core.stream``) consumes exactly this contract.
+
+Three backings:
+
+* :class:`MemmapSource` -- the out-of-core path: a directory holding one
+  raw binary per variable plus a ``manifest.json`` (shape/dtype/order).
+  ``read_rows`` slices a ``np.memmap``, so only the requested rows are
+  ever resident (the f32 launch copy of one chunk is the peak footprint
+  even when the variable is 100x device memory).
+* :class:`NpzSource` -- ``.npz`` convenience for datasets that fit in
+  host memory (``np.load`` materializes a variable per access; the most
+  recently touched variable is cached so chunk iteration doesn't re-read
+  the archive per chunk).
+* :class:`GeneratorSource` -- the existing ``data.scientific`` field
+  generators as a virtual dataset: 2-D slice-stack variables are
+  BIT-EQUAL to ``scientific.field_slices`` row for row (same key split,
+  same z schedule) but generated per chunk, so a variable larger than
+  host memory can be produced -- and written to disk by
+  :func:`write_dataset` / ``tools/make_dataset.py`` -- without ever
+  materializing it.
+
+Rows are served as C-contiguous float32 (featurization casts to f32
+anyway, and contiguous row bytes make the incremental content digest --
+``serve.method.StreamingDigest`` -- equal to the resident-array
+``slice_digest``).  On-disk dtype may be float64: converting the chunk
+on read is exactly the host-side ingest work a real archive costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import zlib
+from typing import Dict, Iterator, Optional, Sequence, Tuple
+
+import numpy as np
+
+MANIFEST = "manifest.json"
+_FORMAT_VERSION = 1
+
+
+class StreamingDigest:
+    """Incremental content digest of a variable fed as row chunks.
+
+    The serving layer keys its cross-request :class:`~repro.serve.
+    sweep_service.FeatureCache` on ``serve.method.slice_digest`` -- a
+    sha1 of the array's C-order f32 bytes plus its shape -- which
+    requires the full f32 buffer resident.  This class computes the
+    IDENTICAL digest from chunked reads: row chunks are C-contiguous
+    along axis 0, so hashing each chunk's f32 bytes in order reproduces
+    the full buffer's byte stream, and the shape suffix is reconstructed
+    from the accumulated row count.  ``slice_digest(x)`` delegates here
+    (one implementation, zero drift), so an out-of-core variable's cache
+    key can be computed without ever materializing the variable.
+    """
+
+    def __init__(self):
+        self._h = hashlib.sha1()
+        self._rows = 0
+        self._tail: Optional[Tuple[int, ...]] = None
+
+    def update(self, chunk) -> "StreamingDigest":
+        """Absorb the next row chunk (cast/copied to C-order f32 exactly
+        like ``slice_digest``); chunks must share a trailing shape."""
+        arr = np.ascontiguousarray(np.asarray(chunk, np.float32))
+        if arr.ndim == 0:
+            raise ValueError("StreamingDigest needs rows, got a scalar")
+        if self._tail is None:
+            self._tail = arr.shape[1:]
+        elif arr.shape[1:] != self._tail:
+            raise ValueError(
+                f"chunk trailing shape {arr.shape[1:]} != first chunk's "
+                f"{self._tail}")
+        self._h.update(arr.tobytes())
+        self._rows += arr.shape[0]
+        return self
+
+    @property
+    def rows(self) -> int:
+        return self._rows
+
+    def digest(self) -> str:
+        """The hex digest so far: equal to ``slice_digest`` of the
+        concatenation of every chunk absorbed.  Non-destructive -- more
+        chunks may follow."""
+        if self._tail is None:
+            raise ValueError("StreamingDigest.digest() before any update()")
+        h = self._h.copy()
+        h.update(str((self._rows,) + self._tail).encode())
+        return h.hexdigest()
+
+
+@dataclasses.dataclass(frozen=True)
+class VariableMeta:
+    """Shape/dtype of one named variable; ``shape[0]`` is the row axis
+    the sweep layer chunks and shards over."""
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str                         # on-disk dtype ("float32"/"float64")
+
+    @property
+    def rows(self) -> int:
+        return int(self.shape[0])
+
+    @property
+    def row_shape(self) -> Tuple[int, ...]:
+        return tuple(self.shape[1:])
+
+    @property
+    def row_nbytes_f32(self) -> int:
+        """f32 bytes of ONE row -- the unit chunk budgets are charged in
+        (chunks are staged/launched as f32 regardless of disk dtype)."""
+        return 4 * int(np.prod(self.row_shape, dtype=np.int64))
+
+    @property
+    def nbytes_f32(self) -> int:
+        return self.rows * self.row_nbytes_f32
+
+
+def rows_per_chunk(meta: VariableMeta, budget_bytes: int) -> int:
+    """Rows of ``meta`` fitting a ``budget_bytes`` f32 chunk (>= 1: a
+    single row is the indivisible unit even when it alone exceeds the
+    budget -- the caller's device must hold at least one row)."""
+    if budget_bytes <= 0:
+        raise ValueError(f"chunk budget must be positive, got {budget_bytes}")
+    return max(1, min(meta.rows, budget_bytes // max(meta.row_nbytes_f32, 1)))
+
+
+class DatasetSource:
+    """Named variables -> on-demand contiguous row ranges.
+
+    Subclasses implement :meth:`variables`, :meth:`meta`, and
+    :meth:`read_rows`; chunk iteration, budget math, and whole-variable
+    reads are shared here.
+    """
+
+    def variables(self) -> Tuple[str, ...]:
+        raise NotImplementedError
+
+    def meta(self, name: str) -> VariableMeta:
+        raise NotImplementedError
+
+    def read_rows(self, name: str, lo: int, hi: int) -> np.ndarray:
+        """Rows [lo, hi) of variable ``name`` as a C-contiguous float32
+        ``(hi - lo,) + row_shape`` array (a fresh chunk copy the caller
+        may donate to a device launch)."""
+        raise NotImplementedError
+
+    # -- shared conveniences -------------------------------------------
+
+    def read(self, name: str) -> np.ndarray:
+        """The whole variable (in-memory reference path; tests/benches)."""
+        return self.read_rows(name, 0, self.meta(name).rows)
+
+    def chunk_rows(self, name: str, budget_bytes: int) -> int:
+        return rows_per_chunk(self.meta(name), budget_bytes)
+
+    def chunks(self, name: str, *, budget_bytes: Optional[int] = None,
+               rows: Optional[int] = None,
+               ) -> Iterator[Tuple[int, np.ndarray]]:
+        """Yield ``(lo, chunk)`` pairs covering variable ``name`` in
+        order: every chunk has ``rows`` rows (from ``budget_bytes`` when
+        not given explicitly) except a possibly-ragged final one.
+        Chunk boundaries depend only on (k, rows), so every process of a
+        multi-process stream iterates the same chunk schedule."""
+        meta = self.meta(name)
+        if rows is None:
+            if budget_bytes is None:
+                raise ValueError("chunks() needs rows= or budget_bytes=")
+            rows = rows_per_chunk(meta, budget_bytes)
+        if rows < 1:
+            raise ValueError(f"chunk rows must be >= 1, got {rows}")
+        for lo in range(0, meta.rows, rows):
+            hi = min(lo + rows, meta.rows)
+            yield lo, self.read_rows(name, lo, hi)
+
+    def _check_range(self, meta: VariableMeta, lo: int, hi: int) -> None:
+        if not (0 <= lo <= hi <= meta.rows):
+            raise ValueError(
+                f"rows [{lo}, {hi}) out of range for variable "
+                f"{meta.name!r} with {meta.rows} rows")
+
+
+def _as_f32_rows(block: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(np.asarray(block, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# File-backed sources
+# ---------------------------------------------------------------------------
+
+
+class MemmapSource(DatasetSource):
+    """Raw-binary dataset directory (the out-of-core backing).
+
+    Layout: ``<dir>/manifest.json`` mapping variable names to
+    ``{"shape", "dtype", "file"}`` plus one C-order raw binary per
+    variable.  ``read_rows`` opens the file as ``np.memmap`` once and
+    slices it per call, so a chunk read touches only that chunk's bytes.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        mf = os.path.join(self.path, MANIFEST)
+        if not os.path.exists(mf):
+            raise FileNotFoundError(
+                f"{self.path!r} is not a memmap dataset (no {MANIFEST}); "
+                "write one with tools/make_dataset.py or data.source."
+                "write_dataset")
+        with open(mf) as f:
+            manifest = json.load(f)
+        if manifest.get("format_version") != _FORMAT_VERSION:
+            raise ValueError(
+                f"unsupported dataset format_version "
+                f"{manifest.get('format_version')!r} in {mf}")
+        self._vars: Dict[str, dict] = dict(manifest["variables"])
+        self._maps: Dict[str, np.memmap] = {}
+
+    def variables(self) -> Tuple[str, ...]:
+        return tuple(self._vars)
+
+    def meta(self, name: str) -> VariableMeta:
+        spec = self._vars[name]
+        return VariableMeta(name, tuple(int(s) for s in spec["shape"]),
+                            str(spec["dtype"]))
+
+    def _map(self, name: str) -> np.memmap:
+        mm = self._maps.get(name)
+        if mm is None:
+            spec = self._vars[name]
+            mm = self._maps[name] = np.memmap(
+                os.path.join(self.path, spec["file"]), mode="r",
+                dtype=np.dtype(spec["dtype"]),
+                shape=tuple(int(s) for s in spec["shape"]))
+        return mm
+
+    def read_rows(self, name: str, lo: int, hi: int) -> np.ndarray:
+        self._check_range(self.meta(name), lo, hi)
+        return _as_f32_rows(self._map(name)[lo:hi])
+
+
+class NpzSource(DatasetSource):
+    """``.npz`` dataset (host-memory convenience backing).
+
+    ``np.load`` materializes a whole variable per archive access; the
+    most recently read variable is cached so per-chunk iteration costs
+    one decode, not one per chunk.  For datasets that do not fit host
+    memory use :class:`MemmapSource`.
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._npz = np.load(self.path)
+        self._cached: Tuple[Optional[str], Optional[np.ndarray]] = (None, None)
+
+    def variables(self) -> Tuple[str, ...]:
+        return tuple(self._npz.files)
+
+    def meta(self, name: str) -> VariableMeta:
+        if name != self._cached[0]:
+            self._cached = (name, self._npz[name])
+        arr = self._cached[1]
+        return VariableMeta(name, tuple(arr.shape), str(arr.dtype))
+
+    def read_rows(self, name: str, lo: int, hi: int) -> np.ndarray:
+        meta = self.meta(name)               # fills the cache
+        self._check_range(meta, lo, hi)
+        return _as_f32_rows(self._cached[1][lo:hi])
+
+
+def open_dataset(path: str) -> DatasetSource:
+    """Open a dataset written by :func:`write_dataset`: a ``.npz`` file
+    or a memmap manifest directory."""
+    if os.path.isdir(path):
+        return MemmapSource(path)
+    if path.endswith(".npz"):
+        return NpzSource(path)
+    raise ValueError(
+        f"{path!r} is neither a dataset directory nor a .npz archive")
+
+
+# ---------------------------------------------------------------------------
+# Generator-backed source (data.scientific as a virtual dataset)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldVariable:
+    """One synthetic variable: ``count`` rows of a named
+    ``data.scientific`` field.  ``shape=(n,)`` (or an int) makes rows
+    (n, n) 2-D slices bit-equal to ``scientific.field_slices``;
+    ``shape=(d, m, n)`` makes rows independent (d, m, n) volumes (a
+    rank-4 variable) via ``scientific.volume`` with a per-row seed."""
+    field: str
+    count: int
+    shape: Tuple[int, ...]
+    seed: int = 0
+
+    def __post_init__(self):
+        shape = self.shape
+        if isinstance(shape, int):
+            shape = (int(shape),)
+        object.__setattr__(self, "shape", tuple(int(s) for s in shape))
+        if len(self.shape) not in (1, 3):
+            raise ValueError(
+                f"FieldVariable shape must be (n,) for 2-D slices or "
+                f"(d, m, n) for volumes, got {self.shape}")
+
+    @property
+    def row_shape(self) -> Tuple[int, ...]:
+        n = self.shape[0]
+        return (n, n) if len(self.shape) == 1 else self.shape
+
+
+class GeneratorSource(DatasetSource):
+    """``data.scientific`` generators as a chunk-addressable dataset.
+
+    2-D slice variables reproduce ``scientific.field_slices(field,
+    count, seed, n)`` EXACTLY (same ``PRNGKey`` split over the full
+    count, same ``linspace(0, pi, count)`` z schedule) but generate only
+    the requested row range -- so a multi-gigabyte variable can be
+    streamed or written to disk chunk by chunk with a bounded footprint.
+    """
+
+    def __init__(self, variables: Sequence[FieldVariable]):
+        self._vars: Dict[str, FieldVariable] = {}
+        for v in variables:
+            key = self.variable_name(v)
+            if key in self._vars:
+                raise ValueError(f"duplicate generated variable {key!r}")
+            self._vars[key] = v
+
+    @staticmethod
+    def variable_name(v: FieldVariable) -> str:
+        return v.field if len(v.shape) == 1 else v.field + "-vol"
+
+    def variables(self) -> Tuple[str, ...]:
+        return tuple(self._vars)
+
+    def meta(self, name: str) -> VariableMeta:
+        v = self._vars[name]
+        return VariableMeta(name, (v.count,) + v.row_shape, "float32")
+
+    def read_rows(self, name: str, lo: int, hi: int) -> np.ndarray:
+        self._check_range(self.meta(name), lo, hi)
+        v = self._vars[name]
+        if lo == hi:
+            return np.zeros((0,) + v.row_shape, np.float32)
+        if len(v.shape) == 1:
+            return _as_f32_rows(generate_field_rows(
+                v.field, v.count, lo, hi, n=v.shape[0], seed=v.seed))
+        from repro.data import scientific
+        return _as_f32_rows(np.stack(
+            [np.asarray(scientific.volume(v.field, v.shape, seed=v.seed + i))
+             for i in range(lo, hi)]))
+
+
+def generate_field_rows(field: str, count: int, lo: int, hi: int, *,
+                        n: Optional[int] = None, seed: int = 0) -> np.ndarray:
+    """Rows [lo, hi) of ``scientific.field_slices(field, count, seed,
+    n)``, bit-equal to slicing the full stack, without generating the
+    other rows: the PRNG keys are split for the FULL count and only the
+    requested indices are evaluated."""
+    import jax
+    import jax.numpy as jnp
+    from repro.data import scientific
+
+    spec = scientific.FIELDS[field]
+    n = n or spec.n
+    keys = jax.random.split(
+        jax.random.PRNGKey(zlib.crc32(field.encode()) % (2**31) + seed),
+        count)
+    zs = jnp.linspace(0.0, jnp.pi, count)
+    if lo == hi:
+        return np.zeros((0, n, n), np.float32)
+    return np.stack([np.asarray(spec.generator(keys[i], n, float(zs[i])))
+                     for i in range(lo, hi)])
+
+
+# ---------------------------------------------------------------------------
+# Dataset writer (tools/make_dataset.py is the CLI wrapper)
+# ---------------------------------------------------------------------------
+
+
+def write_dataset(path: str, source: DatasetSource, *,
+                  fmt: str = "memmap", dtype: str = "float32",
+                  budget_bytes: int = 64 << 20,
+                  seed: Optional[int] = None) -> str:
+    """Copy every variable of ``source`` to a file-backed dataset.
+
+    ``fmt="memmap"`` writes ``<path>/manifest.json`` + one raw C-order
+    binary per variable, chunk by chunk -- peak memory is one chunk even
+    for variables far larger than host memory.  ``fmt="npz"`` writes a
+    single (uncompressed) archive and is the small-dataset convenience.
+    ``dtype="float64"`` upcasts on write so streaming reads pay the
+    realistic f64->f32 ingest conversion of real archives.  Returns the
+    dataset path (``fmt="npz"`` appends ``.npz`` when missing).
+    """
+    np_dtype = np.dtype(dtype)
+    if np_dtype not in (np.dtype(np.float32), np.dtype(np.float64)):
+        raise ValueError(f"dtype must be float32/float64, got {dtype}")
+    if fmt == "npz":
+        if not path.endswith(".npz"):
+            path = path + ".npz"
+        arrs = {name: source.read(name).astype(np_dtype)
+                for name in source.variables()}
+        np.savez(path, **arrs)
+        return path
+    if fmt != "memmap":
+        raise ValueError(f"fmt must be 'memmap' or 'npz', got {fmt!r}")
+    os.makedirs(path, exist_ok=True)
+    manifest = {"format_version": _FORMAT_VERSION, "seed": seed,
+                "variables": {}}
+    for name in source.variables():
+        meta = source.meta(name)
+        fn = name.replace("/", "_") + ".bin"
+        mm = np.memmap(os.path.join(path, fn), mode="w+", dtype=np_dtype,
+                       shape=meta.shape)
+        for lo, chunk in source.chunks(name, budget_bytes=budget_bytes):
+            mm[lo:lo + chunk.shape[0]] = chunk.astype(np_dtype)
+        mm.flush()
+        del mm
+        manifest["variables"][name] = {
+            "shape": list(meta.shape), "dtype": str(np_dtype), "file": fn}
+    with open(os.path.join(path, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path

@@ -42,7 +42,6 @@ of these two properties.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import time
 from concurrent.futures import Future
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -51,6 +50,8 @@ import numpy as np
 
 from repro.core import predictors as P
 from repro.core import usecases as UC
+from repro.core.regression import predict_fast
+from repro.data.source import StreamingDigest
 from repro.dist import sweep as DS
 
 _EPS_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
@@ -80,11 +81,15 @@ def _f32(eps) -> float:
 
 def slice_digest(x) -> str:
     """Content hash of a slice's f32 bytes (featurization casts to f32,
-    so a float64 array and its f32 round-trip share cache entries)."""
-    arr = np.ascontiguousarray(np.asarray(x, np.float32))
-    h = hashlib.sha1(arr.tobytes())
-    h.update(str(arr.shape).encode())
-    return h.hexdigest()
+    so a float64 array and its f32 round-trip share cache entries).
+
+    Implemented as the one-chunk case of ``repro.data.source.
+    StreamingDigest``, so a digest accumulated from chunked reads of an
+    out-of-core variable (``core.stream.stream_features(digest=...)``)
+    is bit-identical to this resident-array hash -- the FeatureCache can
+    be probed/keyed for streamed variables without re-materializing
+    them."""
+    return StreamingDigest().update(x).digest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -366,6 +371,78 @@ class BestCompressorMethod(ServableMethod):
         return UC.best_compressor(
             req.payload["models"], req.payload["data"],
             req.payload["eps"], feats=feats)
+
+
+class AdviseMethod(ServableMethod):
+    """Compression-advisor chunk: a (k, ...) row stack + per-compressor
+    ``EbGridModel``s -> the per-row predicted-CR table over the shared
+    eb grid, ``{"compressors", "ebs", "cr": (k, n_comp, e)}``.
+
+    This is the ``launch.advise`` workload as a servable method: the
+    advisor streams a dataset variable chunk by chunk and submits each
+    chunk here, so advisor featurization rides the SAME coalesced sweep
+    launches (and cross-request feature cache) as every other method --
+    one launch per batch window covers every compressor, because the
+    features are compressor-independent.  Per-variable aggregation
+    across chunks (CR curves, per-target recommendations) stays with the
+    caller; :meth:`cr_table` is the shared feats->CR kernel so the
+    service path and the direct ``core.stream`` path cannot drift.
+    """
+
+    name = "advise"
+
+    @staticmethod
+    def check_models(models: Dict[str, Any]) -> Tuple[np.ndarray, int]:
+        """Validate an advisor model set: non-empty, one shared eb grid,
+        one shared training rank.  Returns (grid ebs, stack ndim)."""
+        if not models:
+            raise ValueError("advise needs at least one trained EbGridModel")
+        grids = {tuple(np.asarray(m.ebs, np.float64).tolist())
+                 for m in models.values()}
+        if len(grids) > 1:
+            raise ValueError(
+                "advise models must share one eb grid (features are "
+                f"shared per grid eb); got {len(grids)} distinct grids")
+        ndims = {m.ndim for m in models.values()}
+        if len(ndims) > 1:
+            raise ValueError(
+                f"advise models mix training ndims {sorted(ndims)}")
+        return np.asarray(next(iter(models.values())).ebs,
+                          np.float64), ndims.pop() + 1
+
+    @staticmethod
+    def cr_table(models: Dict[str, Any], feats: np.ndarray) -> np.ndarray:
+        """(k, e, 2) feature rows -> (k, n_comp, e) predicted CRs, NaN/
+        inf clamped exactly like ``EbGridModel.predict``."""
+        feats = np.asarray(feats)
+        k, e = feats.shape[0], feats.shape[1]
+        cr = np.empty((k, len(models), e), np.float64)
+        for ci, gm in enumerate(models.values()):
+            for ei in range(e):
+                preds = predict_fast(gm.models[ei].model, feats[:, ei, :])
+                cr[:, ci, ei] = [UC._clamp_cr(v) for v in np.asarray(preds)]
+        return cr
+
+    def pre_process(self, svc, models: Dict[str, Any],
+                    stack) -> MethodRequest:
+        ebs, stack_ndim = self.check_models(models)
+        cfg = svc._check_cfg(next(iter(models.values())).cfg)
+        arr = np.asarray(stack, np.float32)
+        if arr.ndim != stack_ndim:
+            raise ValueError(
+                f"submit_advise: models trained on {stack_ndim - 1}-D "
+                f"data expect a rank-{stack_ndim} chunk, got {arr.shape}")
+        eps_keys = tuple(_f32(e) for e in ebs)
+        items = [Item((slice_digest(s), cfg), s, eps_keys) for s in arr]
+        return MethodRequest(self, items, Future(),
+                             {"models": dict(models), "ebs": ebs},
+                             time.perf_counter())
+
+    def post_process(self, req, rows_for):
+        feats = np.stack([rows_for(it) for it in req.items])    # (k, e, 2)
+        models = req.payload["models"]
+        return {"compressors": tuple(models), "ebs": req.payload["ebs"],
+                "cr": self.cr_table(models, feats)}
 
 
 class KVGateMethod(ServableMethod):

@@ -19,9 +19,9 @@ from __future__ import annotations
 
 from typing import Dict, List, Tuple
 
-from repro.serve.method import (BestCompressorMethod, FeaturizeMethod,
-                                FindEbMethod, KVGateMethod, Launcher,
-                                ServableMethod, SweepLauncher)
+from repro.serve.method import (AdviseMethod, BestCompressorMethod,
+                                FeaturizeMethod, FindEbMethod, KVGateMethod,
+                                Launcher, ServableMethod, SweepLauncher)
 
 
 class MethodRegistry:
@@ -67,14 +67,17 @@ class MethodRegistry:
 
 
 def default_registry() -> MethodRegistry:
-    """The built-in platform: the paper's three request kinds over one
-    shared sweep launcher, plus the serving engine's KV-cache gate.
-    A fresh instance per call -- services never share mutable registry
-    state."""
+    """The built-in platform: the paper's three request kinds plus the
+    streaming compression advisor over one shared sweep launcher, plus
+    the serving engine's KV-cache gate.  A fresh instance per call --
+    services never share mutable registry state.  ``advise`` registers
+    LAST so the launcher wire-id order (sweep=0, int8cr=1) is unchanged
+    from the pre-advisor platform (it reuses the sweep launcher)."""
     reg = MethodRegistry()
     sweep = SweepLauncher()
     reg.register(FeaturizeMethod(sweep))
     reg.register(FindEbMethod(sweep))
     reg.register(BestCompressorMethod(sweep))
     reg.register(KVGateMethod())
+    reg.register(AdviseMethod(sweep))
     return reg

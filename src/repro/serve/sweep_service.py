@@ -525,6 +525,15 @@ class SweepService:
         predicted int8 CRs], matching ``predicted_cr_int8`` per leaf."""
         return self.submit("kv_gate", leaves)
 
+    def submit_advise(self, models: Dict[str, object], stack) -> Future:
+        """Compression-advisor chunk (the ``launch.advise`` streaming
+        workload): a (k, m, n) / (k, d, m, n) row chunk + per-compressor
+        ``EbGridModel``s sharing one eb grid -> Future[{"compressors",
+        "ebs", "cr": (k, n_comp, e)}] -- per-row predicted CRs for every
+        (compressor, grid eb), from ONE coalesced featurization per
+        batch window (features are compressor-independent)."""
+        return self.submit("advise", models, stack)
+
     # sync conveniences ------------------------------------------------
 
     def featurize(self, slices, epss, cfg=None) -> np.ndarray:
@@ -538,6 +547,9 @@ class SweepService:
 
     def kv_gate(self, leaves) -> np.ndarray:
         return self.submit_kv_gate(leaves).result()
+
+    def advise(self, models, stack) -> dict:
+        return self.submit_advise(models, stack).result()
 
     def stats(self) -> dict:
         with self._cond:

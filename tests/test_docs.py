@@ -80,7 +80,9 @@ def test_docs_reference_real_code():
     for sym in ("quantized_entropy", "svd_trunc", "hosvd_trunc_batch",
                 "find_error_bound_for_cr", "best_compressor",
                 "bench_3d", "EbGridModel", "ServableMethod",
-                "default_registry", "kv_gate"):
+                "default_registry", "kv_gate",
+                # streaming advisor rows (UC1/UC2 at dataset scale)
+                "stream_features", "launch.advise"):
         assert sym in mapping, f"paper_mapping.md lost {sym}"
     # the knobs the serving doc teaches must exist on ServiceConfig
     from repro.serve.sweep_service import ServiceConfig
@@ -108,7 +110,34 @@ def test_method_platform_modules_expose_documented_api():
         assert sym in registry, f"registry.py lost {sym}"
     from repro.serve.registry import default_registry
     assert default_registry().names() == (
-        "featurize", "find_eb", "best_compressor", "kv_gate")
+        "featurize", "find_eb", "best_compressor", "kv_gate", "advise")
+
+
+def test_streaming_doc_references_real_code():
+    """docs/streaming.md must keep teaching the symbols the streaming
+    layer actually exports, and the README must link it."""
+    doc = _read("docs", "streaming.md")
+    for sym in ("DatasetSource", "MemmapSource", "NpzSource",
+                "GeneratorSource", "StreamingDigest", "StreamConfig",
+                "stream_features", "stream_dataset", "budget_bytes",
+                "prefetch", "max_in_flight", "process_local",
+                "make_dataset.py", "repro.launch.advise",
+                "submit_advise", "harmonic", "BENCH_stream"):
+        assert sym in doc, f"streaming.md lost {sym}"
+    # the doc's vocabulary must exist in code
+    from repro.core import stream as ST
+    from repro.data import source as SRC
+    for mod, names in ((SRC, ("DatasetSource", "MemmapSource", "NpzSource",
+                              "GeneratorSource", "StreamingDigest",
+                              "open_dataset", "write_dataset")),
+                       (ST, ("StreamConfig", "stream_features",
+                             "stream_dataset"))):
+        for name in names:
+            assert hasattr(mod, name), f"{mod.__name__} lost {name}"
+    from repro.serve.sweep_service import SweepService
+    assert hasattr(SweepService, "submit_advise")
+    assert hasattr(SweepService, "advise")
+    assert "docs/streaming.md" in _read("README.md")
 
 
 def test_performance_doc_references_real_code():

@@ -85,12 +85,14 @@ def test_unsorted_batch_buckets_rejected():
 def test_default_registry_shape():
     reg = default_registry()
     assert reg.names() == ("featurize", "find_eb", "best_compressor",
-                           "kv_gate")
-    # the three paper methods share ONE launcher instance (that identity
-    # is what makes them coalesce into the same launches)
+                           "kv_gate", "advise")
+    # the paper methods (and the advisor riding their sweeps) share ONE
+    # launcher instance (that identity is what makes them coalesce into
+    # the same launches)
     sweep = reg.get("featurize").launcher
     assert reg.get("find_eb").launcher is sweep
     assert reg.get("best_compressor").launcher is sweep
+    assert reg.get("advise").launcher is sweep
     assert reg.get("kv_gate").launcher is not sweep
     # launcher wire ids are assigned in registration order
     assert reg.launcher_id(sweep) == 0

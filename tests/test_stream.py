@@ -1,0 +1,407 @@
+"""Streaming dataset sweeps: DatasetSource chunking, incremental
+aggregation bit-equality, streaming content digests, and the advisor.
+
+The load-bearing invariant: the chunked driver (``core.stream``) must
+produce the EXACT tensor the in-memory ``features_sweep`` produces --
+every chunk launches through the same row-independent sweep body, so
+chunk boundaries, ragged final chunks, budgets that don't divide k, and
+double-buffering must all be invisible in the output bits.  The
+multi-process cohort rides ``tests._child.run_procs`` exactly like the
+fabric suites.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _child import run_child, run_procs
+
+from repro.core import predictors as P
+from repro.core import stream as ST
+from repro.data import scientific
+from repro.data import source as SRC
+
+EBS = [1e-4, 1e-3, 1e-2]
+
+
+def _gen(count=11, n=32, seed=0):
+    return SRC.GeneratorSource([SRC.FieldVariable("miranda-vx", count,
+                                                  (n,), seed=seed)])
+
+
+# ---------------------------------------------------------------------------
+# DatasetSource backings
+# ---------------------------------------------------------------------------
+
+
+def test_generator_rows_bitequal_field_slices():
+    """Chunked generation == slicing the full field_slices stack, bit
+    for bit (same key split over the full count, same z schedule)."""
+    full = np.asarray(scientific.field_slices("miranda-vx", count=9, n=32))
+    for lo, hi in ((0, 9), (2, 5), (8, 9), (3, 3)):
+        rows = SRC.generate_field_rows("miranda-vx", 9, lo, hi, n=32)
+        assert np.array_equal(rows, full[lo:hi])
+    gen = _gen(9, 32)
+    assert gen.variables() == ("miranda-vx",)
+    assert np.array_equal(gen.read("miranda-vx"), full)
+    # chunk iteration covers the variable exactly once, in order
+    got = np.concatenate([c for _, c in gen.chunks("miranda-vx", rows=4)])
+    assert np.array_equal(got, full)
+
+
+def test_memmap_and_npz_roundtrip(tmp_path):
+    """write_dataset -> open_dataset round-trips both formats; float64
+    on disk converts to the identical f32 rows on read."""
+    gen = _gen(7, 32)
+    ref = gen.read("miranda-vx")
+    mm = SRC.write_dataset(str(tmp_path / "ds"), gen, fmt="memmap",
+                           dtype="float64", budget_bytes=3 * 32 * 32 * 4)
+    ds = SRC.open_dataset(mm)
+    assert isinstance(ds, SRC.MemmapSource)
+    meta = ds.meta("miranda-vx")
+    assert meta.shape == (7, 32, 32) and meta.dtype == "float64"
+    assert np.array_equal(ds.read("miranda-vx"), ref)
+    assert np.array_equal(ds.read_rows("miranda-vx", 2, 5), ref[2:5])
+
+    nz = SRC.write_dataset(str(tmp_path / "ds2"), gen, fmt="npz",
+                           dtype="float32")
+    dz = SRC.open_dataset(nz)
+    assert isinstance(dz, SRC.NpzSource)
+    assert np.array_equal(dz.read("miranda-vx"), ref)
+
+
+def test_source_validation(tmp_path):
+    gen = _gen(5, 32)
+    with pytest.raises(ValueError, match="out of range"):
+        gen.read_rows("miranda-vx", 0, 6)
+    with pytest.raises(ValueError, match="rows= or budget_bytes="):
+        list(gen.chunks("miranda-vx"))
+    with pytest.raises(ValueError, match="budget must be positive"):
+        SRC.rows_per_chunk(gen.meta("miranda-vx"), 0)
+    with pytest.raises(FileNotFoundError):
+        SRC.MemmapSource(str(tmp_path / "nope"))
+    with pytest.raises(ValueError, match="neither"):
+        SRC.open_dataset(str(tmp_path / "nope.bin"))
+    # a row is the indivisible unit: tiny budgets still make progress
+    assert SRC.rows_per_chunk(gen.meta("miranda-vx"), 1) == 1
+    with pytest.raises(ValueError, match="shape must be"):
+        SRC.FieldVariable("miranda-vx", 3, (4, 4))
+
+
+# ---------------------------------------------------------------------------
+# Chunked-vs-in-memory bit-equality
+# ---------------------------------------------------------------------------
+
+
+def test_stream_bitequal_2d(tmp_path):
+    """2-D stack, every chunking regime: budget not dividing k (ragged
+    final chunk), single-row chunks, one covering chunk; prefetch on and
+    off.  Streamed == in-memory features_sweep, bit for bit."""
+    gen = _gen(11, 32)
+    path = SRC.write_dataset(str(tmp_path / "ds"), gen, fmt="memmap",
+                             dtype="float64", budget_bytes=1 << 20)
+    ds = SRC.MemmapSource(path)
+    ref = np.asarray(P.features_sweep(ds.read("miranda-vx"), EBS,
+                                      sharded=False))
+    row = 32 * 32 * 4
+    for budget, prefetch in ((4 * row, 2), (4 * row, 0), (1, 2),
+                             (100 * row, 1), (3 * row, 3)):
+        got = ST.stream_features(
+            ds, "miranda-vx", EBS,
+            stream=ST.StreamConfig(budget_bytes=budget, prefetch=prefetch))
+        assert got.shape == ref.shape
+        assert np.array_equal(got, ref), \
+            (budget, prefetch, float(np.abs(got - ref).max()))
+
+
+def test_stream_bitequal_rank4():
+    """Rank-4 volume-stack variables chunk over the leading axis exactly
+    like slice stacks (HOSVD body, ragged final chunk)."""
+    gen = SRC.GeneratorSource(
+        [SRC.FieldVariable("qmcpack", 5, (4, 16, 16))])
+    name = "qmcpack-vol"
+    ref = np.asarray(P.features_sweep(gen.read(name), EBS, sharded=False))
+    row = 4 * 16 * 16 * 4
+    for rows in (2, 3, 5):
+        got = ST.stream_features(
+            gen, name, EBS,
+            stream=ST.StreamConfig(budget_bytes=rows * row))
+        assert np.array_equal(got, ref), rows
+
+
+def test_stream_engine_entry_and_dataset(tmp_path):
+    """The engine's ``stream`` entry point and ``stream_dataset`` (with
+    digests) match the direct driver."""
+    gen = SRC.GeneratorSource([SRC.FieldVariable("miranda-vx", 6, (32,)),
+                               SRC.FieldVariable("qmcpack", 5, (32,))])
+    digests = {}
+    out = ST.stream_dataset(gen, EBS, digests=digests,
+                            stream=ST.StreamConfig(budget_bytes=2 * 32 * 32 * 4))
+    from repro.serve.method import slice_digest
+    for name in gen.variables():
+        full = gen.read(name)
+        assert np.array_equal(
+            out[name], np.asarray(P.features_sweep(full, EBS, sharded=False)))
+        assert digests[name] == slice_digest(full)
+    eng = P.get_engine()
+    got = eng.stream(gen, "miranda-vx", EBS,
+                     stream=ST.StreamConfig(budget_bytes=1 << 14))
+    assert np.array_equal(got, out["miranda-vx"])
+
+
+def test_stream_validation():
+    gen = _gen(4, 32)
+    with pytest.raises(ValueError, match="budget_bytes must be positive"):
+        ST.StreamConfig(budget_bytes=0)
+    with pytest.raises(ValueError, match="max_in_flight"):
+        ST.StreamConfig(max_in_flight=0)
+    with pytest.raises(ValueError, match="error bound"):
+        ST.stream_features(gen, "miranda-vx", [0.0])
+    # reader-thread failures surface as the caller's exception, not a hang
+    class Broken(SRC.DatasetSource):
+        def variables(self):
+            return ("x",)
+
+        def meta(self, name):
+            return SRC.VariableMeta("x", (4, 8, 8), "float32")
+
+        def read_rows(self, name, lo, hi):
+            raise RuntimeError("disk on fire")
+
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        ST.stream_features(Broken(), "x", EBS,
+                           stream=ST.StreamConfig(budget_bytes=1 << 10))
+
+
+# ---------------------------------------------------------------------------
+# Streaming content digest (FeatureCache out-of-core key path)
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_digest_matches_slice_digest():
+    """Any chunk split of a variable's rows produces the resident-array
+    ``slice_digest`` -- 1-D leaves, 2-D slices, and stacks alike."""
+    from repro.serve.method import slice_digest
+    rng = np.random.default_rng(0)
+    for shape in ((7,), (5, 6), (4, 3, 3), (6, 2, 3, 3)):
+        x = rng.normal(size=shape)
+        want = slice_digest(x)
+        for split in (1, 2, x.shape[0]):
+            d = SRC.StreamingDigest()
+            for lo in range(0, x.shape[0], split):
+                d.update(x[lo:lo + split])
+            assert d.digest() == want, (shape, split)
+            assert d.rows == x.shape[0]
+    # f64 chunks and their f32 round-trip share the digest (the cache
+    # contract slice_digest documents)
+    x64 = rng.normal(size=(4, 5))
+    assert SRC.StreamingDigest().update(x64).digest() == \
+        slice_digest(x64.astype(np.float32))
+    d = SRC.StreamingDigest()
+    with pytest.raises(ValueError, match="before any update"):
+        d.digest()
+    d.update(np.zeros((2, 3)))
+    with pytest.raises(ValueError, match="trailing shape"):
+        d.update(np.zeros((2, 4)))
+
+
+def test_streamed_digest_probes_feature_cache():
+    """A digest accumulated from chunked reads of a never-materialized
+    volume hits the SAME FeatureCache entries a resident-array
+    submission filled -- the out-of-core cache-key path."""
+    from repro.serve.method import slice_digest
+    from repro.serve.sweep_service import ServiceConfig, SweepService
+    vol = np.asarray(scientific.volume("miranda-vx", shape=(6, 16, 16)),
+                     np.float32)
+    # stream the digest slab by slab (2-row chunks of the volume)
+    d = SRC.StreamingDigest()
+    for lo in range(0, 6, 2):
+        d.update(vol[lo:lo + 2])
+    assert d.digest() == slice_digest(vol)
+    svc = SweepService(ServiceConfig(max_wait_ms=1.0, cache_admit_after=1))
+    try:
+        ref = svc.featurize(vol[None], EBS)[0]
+        key = (d.digest(), svc.scfg.pcfg)
+        rows = [svc.cache.get(key, float(np.float32(e))) for e in EBS]
+        assert all(r is not None for r in rows), "streamed digest missed"
+        assert np.array_equal(np.stack(rows), np.asarray(ref, np.float32))
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Advisor (library + servable method + CLI)
+# ---------------------------------------------------------------------------
+
+
+def _train_models(stack, ebs, comps=("sz3-interp", "zfp")):
+    from repro.core import usecases as UC
+    return {c: UC.EbGridModel.train(stack, c, ebs, ndim=2) for c in comps}
+
+
+def test_advise_method_matches_direct_path():
+    """The servable ``advise`` method returns the same CR table the
+    direct stream path computes from the same features."""
+    from repro.serve.method import AdviseMethod
+    from repro.serve.sweep_service import ServiceConfig, SweepService
+    stack = np.asarray(scientific.field_slices("miranda-vx", count=6, n=32))
+    rng = float(stack.max() - stack.min())
+    ebs = [r * rng for r in (1e-3, 1e-2)]
+    models = _train_models(stack[:4], ebs)
+    feats = np.asarray(P.features_sweep(stack, ebs, sharded=False))
+    direct = AdviseMethod.cr_table(models, feats)
+    assert direct.shape == (6, 2, 2) and np.all(direct > 0)
+    svc = SweepService(ServiceConfig(max_wait_ms=1.0))
+    try:
+        out = svc.advise(models, stack)
+    finally:
+        svc.close()
+    assert out["compressors"] == tuple(models)
+    assert np.array_equal(out["cr"], direct)
+    assert np.array_equal(out["ebs"], np.asarray(ebs, np.float64))
+    # model-set validation happens at submit time
+    bad = dict(models)
+    bad["zfp2"] = _train_models(stack[:4], [e * 2 for e in ebs],
+                                comps=("zfp",))["zfp"]
+    with pytest.raises(ValueError, match="share one eb grid"):
+        AdviseMethod.check_models(bad)
+    with pytest.raises(ValueError, match="at least one"):
+        AdviseMethod.check_models({})
+
+
+def test_advise_recommendation_logic():
+    """eb_for_target interpolates the monotonized curve; recommend picks
+    the smallest-eb feasible compressor and flags infeasible targets."""
+    from repro.launch import advise as ADV
+    ebs = np.asarray([1e-4, 1e-3, 1e-2])
+    crs = np.asarray([2.0, 8.0, 32.0])
+    eb, cr = ADV.eb_for_target(ebs, crs, 8.0)
+    assert eb == pytest.approx(1e-3) and cr == pytest.approx(8.0)
+    eb, cr = ADV.eb_for_target(ebs, crs, 16.0)
+    assert 1e-3 < eb < 1e-2 and cr == pytest.approx(16.0)
+    assert ADV.eb_for_target(ebs, crs, 100.0) is None
+    assert ADV.eb_for_target(ebs, crs, 1.0) == (1e-4, 2.0)
+
+    var_cr = np.asarray([[2.0, 8.0, 32.0],      # comp a
+                         [4.0, 16.0, 24.0]])    # comp b: better at low eb
+    rec = ADV.recommend(("a", "b"), ebs, var_cr, [8.0, 30.0, 100.0])
+    assert rec["8"]["compressor"] == "b" and rec["8"]["feasible"]
+    assert rec["30"]["compressor"] == "a"
+    assert rec["100"]["feasible"] is False and \
+        rec["100"]["compressor"] == "a"
+    # harmonic aggregation: equal-size rows -> total-bytes CR
+    hm = ADV.harmonic_cr(np.asarray([[[2.0]], [[6.0]]]))
+    assert hm[0, 0] == pytest.approx(3.0)
+
+
+def test_advise_cli_end_to_end(tmp_path):
+    """make_dataset CLI -> advise CLI (direct and --service) on a small
+    two-variable dataset; the JSON report covers every variable/target
+    and both routes agree."""
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "make_dataset", os.path.join(os.path.dirname(__file__), "..",
+                                     "tools", "make_dataset.py"))
+    mk = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mk)
+    ds = mk.main([str(tmp_path / "ds"), "--var", "miranda-vx:8:32",
+                  "--var", "qmcpack:6:32", "--dtype", "float64",
+                  "--seed", "3"])
+    from repro.launch import advise as ADV
+    argv = [ds, "--compressors", "sz3-interp,zfp", "--targets", "4,8",
+            "--train-rows", "4", "--budget-mb", "0.02", "--mesh", "none",
+            "--out", str(tmp_path / "report.json")]
+    report = ADV.main(argv)
+    with open(tmp_path / "report.json") as f:
+        assert json.load(f)["variables"].keys() == \
+            report["variables"].keys()
+    assert set(report["variables"]) == {"miranda-vx", "qmcpack"}
+    for var in report["variables"].values():
+        assert set(var["targets"]) == {"4", "8"}
+        for rec in var["targets"].values():
+            assert rec["compressor"] in ("sz3-interp", "zfp")
+            assert rec["eb"] > 0 and rec["predicted_cr"] > 0
+    served = ADV.main(argv[:-2] + ["--service"])
+    for name in report["variables"]:
+        assert served["variables"][name]["targets"] == \
+            report["variables"][name]["targets"]
+        assert served["variables"][name]["digest"] == \
+            report["variables"][name]["digest"]
+
+
+# ---------------------------------------------------------------------------
+# Distributed streaming
+# ---------------------------------------------------------------------------
+
+
+def test_stream_sharded_mesh_bitequal(tmp_path):
+    """Single-process 8-device mesh: chunk launches ride the shard_map
+    path (k_pad divides the extent) and stay bit-equal to the
+    single-device in-memory sweep."""
+    gen = _gen(19, 32)
+    path = SRC.write_dataset(str(tmp_path / "ds"), gen, fmt="memmap",
+                             dtype="float64", budget_bytes=1 << 20)
+    run_child(f"""
+        import numpy as np
+        from repro.core import predictors as P
+        from repro.core import stream as ST
+        from repro.data import source as SRC
+        from repro.launch import mesh as M
+
+        ds = SRC.MemmapSource({str(path)!r})
+        ref = np.asarray(P.features_sweep(ds.read("miranda-vx"),
+                                          {EBS!r}, sharded=False))
+        mesh = M.make_sweep_mesh()
+        row = 32 * 32 * 4
+        for rows in (8, 5):      # extent-divisible and ragged buckets
+            got = ST.stream_features(
+                ds, "miranda-vx", {EBS!r}, mesh=mesh,
+                stream=ST.StreamConfig(budget_bytes=rows * row))
+            assert np.array_equal(got, ref), rows
+        print("MESH STREAM BITEXACT", flush=True)
+    """, devices=8)
+
+
+def test_stream_two_process_cohort(tmp_path):
+    """The process_local streaming contract: a 2-process cohort streams
+    the same chunk schedule, each process reading ONLY its
+    process_block rows of every chunk, and both return the full tensor
+    bit-equal to the single-device in-memory sweep."""
+    gen = SRC.GeneratorSource([SRC.FieldVariable("miranda-vx", 10, (32,)),
+                               SRC.FieldVariable("qmcpack", 7, (32,))])
+    path = SRC.write_dataset(str(tmp_path / "ds"), gen, fmt="memmap",
+                             dtype="float64", budget_bytes=1 << 20)
+    outs = run_procs(f"""
+        import numpy as np, jax
+        from repro.core import predictors as P
+        from repro.core import stream as ST
+        from repro.data import source as SRC
+        from repro.launch import mesh as M
+
+        assert jax.process_count() == NPROCS
+        mesh = M.make_sweep_mesh()
+        ds = SRC.MemmapSource({str(path)!r})
+        row = 32 * 32 * 4
+        for name in ("miranda-vx", "qmcpack"):
+            ref = np.asarray(P.features_sweep(ds.read(name), {EBS!r},
+                                              sharded=False))
+            for rows in (4, 10):    # ragged chunks AND k < extent chunks
+                got = ST.stream_features(
+                    ds, name, {EBS!r}, mesh=mesh,
+                    stream=ST.StreamConfig(budget_bytes=rows * row))
+                assert got.shape == ref.shape, (got.shape, ref.shape)
+                assert np.array_equal(got, ref), (name, rows)
+            print(name, "PL-STREAM BITEXACT", flush=True)
+        # digests need every byte; process-spanning streams refuse them
+        try:
+            ST.stream_features(ds, "qmcpack", {EBS!r}, mesh=mesh,
+                               digest=SRC.StreamingDigest())
+        except ValueError as e:
+            assert "single-process" in str(e)
+            print("DIGEST GUARD OK", flush=True)
+    """, num_procs=2, devices=4)
+    for out in outs:
+        assert "miranda-vx PL-STREAM BITEXACT" in out
+        assert "qmcpack PL-STREAM BITEXACT" in out
+        assert "DIGEST GUARD OK" in out

@@ -1,0 +1,77 @@
+"""Deterministic multi-variable synthetic dataset writer.
+
+Streaming tests and ``bench_stream`` need a FILE-BACKED fixture larger
+than a (virtual) device's memory budget; this tool writes one from the
+``repro.data.scientific`` field generators without ever materializing a
+whole variable (chunked ``GeneratorSource`` -> ``write_dataset`` copy,
+bounded by ``--budget-mb``).  Seeded and fully deterministic: the same
+spec always produces byte-identical files, and 2-D slice variables are
+bit-equal to ``scientific.field_slices(field, count, seed, n)``.
+
+    PYTHONPATH=src python tools/make_dataset.py OUT \\
+        --var miranda-vx:24:96 --var cesm-cloud:16:128 \\
+        --var qmcpack:4:8:32:32 --format memmap --dtype float64
+
+``--var field:count:n`` adds ``count`` rows of (n, n) 2-D slices;
+``--var field:count:d:m:n`` adds ``count`` independent (d, m, n)
+volumes (a rank-4 variable, written as ``<field>-vol``).  ``--format
+memmap`` (default) writes a manifest directory readable by
+``repro.data.source.MemmapSource``; ``--format npz`` writes a single
+archive.  ``--dtype float64`` models real archives (readers pay the
+f64->f32 ingest conversion).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def parse_var(spec: str, seed: int):
+    from repro.data import source as SRC
+    parts = spec.split(":")
+    if len(parts) not in (3, 5):
+        raise SystemExit(
+            f"--var {spec!r}: expected field:count:n (2-D slices) or "
+            "field:count:d:m:n (volumes)")
+    field, count = parts[0], int(parts[1])
+    shape = tuple(int(p) for p in parts[2:])
+    return SRC.FieldVariable(field, count, shape, seed=seed)
+
+
+def main(argv=None) -> str:
+    ap = argparse.ArgumentParser(
+        prog="python tools/make_dataset.py",
+        description="Write a deterministic multi-variable synthetic "
+                    "dataset (memmap dir or .npz) for streaming sweeps.")
+    ap.add_argument("out", help="output dataset path")
+    ap.add_argument("--var", action="append", default=[],
+                    help="field:count:n (slices) or field:count:d:m:n "
+                         "(volumes); repeatable")
+    ap.add_argument("--format", choices=("memmap", "npz"), default="memmap")
+    ap.add_argument("--dtype", choices=("float32", "float64"),
+                    default="float32")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-mb", type=float, default=64.0,
+                    help="per-chunk byte budget while writing")
+    args = ap.parse_args(argv)
+    if not args.var:
+        raise SystemExit("need at least one --var spec")
+
+    from repro.data import source as SRC
+    gen = SRC.GeneratorSource([parse_var(s, args.seed) for s in args.var])
+    path = SRC.write_dataset(
+        args.out, gen, fmt=args.format, dtype=args.dtype,
+        budget_bytes=int(args.budget_mb * 2**20), seed=args.seed)
+    total = sum(gen.meta(n).nbytes_f32 for n in gen.variables())
+    print(f"wrote {path}: {len(gen.variables())} variables, "
+          f"{total / 2**20:.1f} MiB (f32 equivalent)")
+    for n in gen.variables():
+        print(f"  {n}: shape={gen.meta(n).shape} dtype={args.dtype}")
+    return path
+
+
+if __name__ == "__main__":
+    main()
