@@ -1,0 +1,151 @@
+"""Quality-frontier benchmark: the fused quality sweep + the UC3 joint
+search (ratio-quality frontier, docs/quality.md).
+
+Three gates:
+
+1. PERF -- the fused one-pass quality sweep (every (slice, eb) SSE from
+   one read of the data) must be >= 3x over the looped per-(slice, eb)
+   baseline (one jitted single-pair PSNR/NRMSE call per cell).
+2. BIT-EQUALITY -- the quality tensor must be bitwise identical across
+   the single-device route, the sharded multi-device launch (when > 1
+   device is up), and the served ``quality`` method.
+3. UC3 GRID-COMPLETENESS (Table-4-style study) -- across a sweep of
+   (cr_floor, psnr_floor) pairs, ``usecases.find_setting`` returns a
+   feasible setting on EVERY grid where a brute-force scan of the
+   monotonized per-compressor frontiers finds a jointly feasible point,
+   and a typed infeasible result everywhere else.
+
+Writes ``results/BENCH_quality.json``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import predictors as P
+from repro.core import usecases as UC
+from repro.kernels.quality import quality_sweep
+
+K, N = 28, 160
+EB_RELS = (1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 1e-1)
+
+
+def _bits(a):
+    return np.asarray(a, np.float32).view(np.uint32)
+
+
+def main() -> dict:
+    slices = common.field_slices_cached("miranda-vx", K, N)
+    rng = float(jnp.max(slices) - jnp.min(slices))
+    epss = np.asarray([r * rng for r in EB_RELS], np.float32)
+    e = len(EB_RELS)
+
+    # looped baseline: one jitted single-(slice, eb) quality call per
+    # cell (eps traced, slice batched away -> ONE compile serves all
+    # k * e calls; the fused sweep's win is the single data read)
+    pair = jax.jit(lambda s, eb: quality_sweep(s[None], eb[None])[0, 0])
+
+    def looped():
+        out = np.empty((K, e, 2), np.float32)
+        for si in range(K):
+            for ei in range(e):
+                out[si, ei] = np.asarray(
+                    pair(slices[si], jnp.float32(epss[ei])))
+        return out
+
+    def fused():
+        return np.asarray(P.quality_sweep(slices, epss))
+
+    t_loop = common.timeit(looped, warmup=1, iters=3)
+    t_fused = common.timeit(fused, warmup=1, iters=5)
+    base, one = looped(), fused()
+    speedup = t_loop / max(t_fused, 1e-9)
+    # the looped baseline runs the same jitted pipeline on (1, 1)
+    # shapes, so it is bit-equal too (batch-shape invariance)
+    bit_equal_loop = bool(np.array_equal(_bits(base), _bits(one)))
+    common.emit("quality/fused_vs_looped", t_fused,
+                f"k={K} e={e} looped_us={t_loop:.0f} fused_us={t_fused:.0f} "
+                f"speedup={speedup:.1f}x bit_equal={bit_equal_loop}")
+
+    # route bit-equality: sharded (when available) + served
+    n_dev = len(jax.devices())
+    bit_equal_sharded = None
+    if n_dev > 1:
+        from repro.launch import mesh as M
+        sharded = np.asarray(P.quality_sweep(
+            slices, epss, mesh=M.make_sweep_mesh(n_dev)))
+        bit_equal_sharded = bool(np.array_equal(_bits(sharded), _bits(one)))
+        common.emit("quality/sharded", 0.0,
+                    f"devices={n_dev} bit_equal={bit_equal_sharded}")
+    from repro.serve.sweep_service import ServiceConfig, SweepService
+    with SweepService(ServiceConfig(max_wait_ms=20.0)) as svc:
+        served = svc.quality(np.asarray(slices), epss)
+    bit_equal_served = bool(np.array_equal(_bits(served), _bits(one)))
+    common.emit("quality/served", 0.0, f"bit_equal={bit_equal_served}")
+
+    # UC3 study: grid-completeness across a floor sweep
+    ebs = [float(x) for x in epss[1:-1]]
+    models = {name: UC.EbGridModel.train(slices[:8], name, ebs)
+              for name in ("zfp", "sz2", "sz3-interp")}
+    x = np.asarray(slices[10])
+    frontiers = {}
+    for name, gm in models.items():
+        pg = np.minimum.accumulate(
+            [gm.predict_psnr(x, float(b)) for b in gm.ebs])
+        cg = np.maximum.accumulate(
+            [gm.predict(x, float(b)) for b in gm.ebs])
+        frontiers[name] = (pg, cg)
+    crs = sorted({float(c) for _, cg in frontiers.values() for c in cg})
+    psnrs = sorted({float(p) for pg, _ in frontiers.values() for p in pg})
+    cases = checked = feasible_hits = 0
+    study = []
+    for cr_floor in [0.5 * crs[0]] + crs + [2.0 * crs[-1]]:
+        for psnr_floor in [psnrs[0] - 10.0] + psnrs + [psnrs[-1] + 10.0]:
+            brute = any(
+                p >= psnr_floor and c >= cr_floor
+                for pg, cg in frontiers.values() for p, c in zip(pg, cg))
+            res = UC.find_setting(models, x, cr_floor=cr_floor,
+                                  psnr_floor=psnr_floor)
+            cases += 1
+            ok = res.feasible if brute else (not res.feasible
+                                            and bool(res.reason))
+            checked += bool(ok)
+            feasible_hits += bool(res.feasible)
+            if res.feasible:
+                ok = ok and res.predicted_cr >= cr_floor \
+                    and res.predicted_psnr >= psnr_floor - 1e-6
+                checked -= not ok
+            study.append({"cr_floor": float(cr_floor),
+                          "psnr_floor": float(psnr_floor),
+                          "brute_feasible": bool(brute),
+                          "feasible": bool(res.feasible),
+                          "compressor": res.compressor, "ok": bool(ok)})
+    grid_complete = checked == cases
+    common.emit("quality/uc3_study", 0.0,
+                f"cases={cases} feasible={feasible_hits} "
+                f"grid_complete={grid_complete}")
+
+    out = {"k": K, "e": e, "looped_us": t_loop, "fused_us": t_fused,
+           "speedup": speedup, "bit_equal_looped": bit_equal_loop,
+           "bit_equal_sharded": bit_equal_sharded,
+           "bit_equal_served": bit_equal_served, "devices": n_dev,
+           "uc3_cases": cases, "uc3_feasible": feasible_hits,
+           "uc3_grid_complete": grid_complete, "uc3_study": study}
+    common.save_json("BENCH_quality", out)
+    assert bit_equal_loop, "fused quality diverged from looped baseline"
+    assert bit_equal_served, "served quality diverged from direct sweep"
+    assert bit_equal_sharded in (None, True), "sharded quality diverged"
+    assert grid_complete, "UC3 missed a jointly feasible grid"
+    assert speedup >= 3.0, \
+        f"fused quality sweep only {speedup:.2f}x vs looped (need >= 3x)"
+    return out
+
+
+if __name__ == "__main__":
+    res = main()
+    print(f"speedup {res['speedup']:.2f}x "
+          f"({'PASS' if res['speedup'] >= 3.0 else 'FAIL'} vs 3x), "
+          f"uc3 {res['uc3_cases']} cases grid_complete="
+          f"{res['uc3_grid_complete']}")

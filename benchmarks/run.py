@@ -22,6 +22,7 @@ SUITES = [
     ("fig10_usecases", "benchmarks.bench_usecases"),
     ("serve_methods_coalescing", "benchmarks.bench_serve"),
     ("stream_advisor", "benchmarks.bench_stream"),
+    ("quality_frontier", "benchmarks.bench_quality"),
     ("multihost_fabric", "benchmarks.bench_multihost"),
     ("fault_recovery", "benchmarks.bench_fault"),
     ("kernels", "benchmarks.bench_kernels"),

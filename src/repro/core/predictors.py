@@ -346,33 +346,58 @@ def variance_fraction_for(cfg: PredictorConfig, stack_ndim: int) -> float:
             else cfg.variance_fraction_3d)
 
 
-def _features_sweep_impl(slices, epss, *, vf, bins, use_kernels, tune=None):
-    """Pure sweep body: (k, m, n) | (k, d, m, n) x (e,) -> (k, e, 2).
+# Trailing-axis width of the sweep tensor per mode: "features" emits the
+# (log q-ent, log trunc-ratio) predictor pair, "quality" the (PSNR,
+# NRMSE) pair of the quantization proxy, "both" their concatenation
+# [log_qe, log_ratio, psnr, nrmse] from ONE read of the data.
+SWEEP_MODE_WIDTHS = {"features": 2, "quality": 2, "both": 4}
+
+
+def _features_sweep_impl(slices, epss, *, vf, bins, use_kernels, tune=None,
+                         mode="features"):
+    """Pure sweep body: (k, m, n) | (k, d, m, n) x (e,) -> (k, e, w).
 
     Rank-dispatching: rank-3 stacks run the batched 2-D SVD predictor,
     rank-4+ stacks the batched HOSVD predictor (``hosvd_trunc_batch``);
     the q-ent sweep flattens each element and is shared as-is.
 
+    ``mode`` selects the trailing axis (``SWEEP_MODE_WIDTHS``):
+    "features" is the paper's predictor pair, "quality" the fused
+    PSNR/NRMSE pair (``kernels/quality``), "both" their concatenation --
+    the one-pass ratio-quality frontier (a single tensor keeps the
+    shard_map out_specs/masking width-agnostic).
+
     Kept jit-free so the distributed layer (``repro.dist.sweep``) can call
     it inside a ``shard_map`` body on each device's local slice shard.
     """
+    if mode not in SWEEP_MODE_WIDTHS:
+        raise ValueError(f"unknown sweep mode {mode!r}; expected one of "
+                         f"{sorted(SWEEP_MODE_WIDTHS)}")
     x = slices.astype(jnp.float32)
-    sigma = jnp.std(x, axis=tuple(range(1, x.ndim)))
-    if x.ndim == 3:
-        sv = svd_trunc_batch(x, vf, use_kernel=use_kernels, tune=tune)
-    else:
-        sv = hosvd_trunc_batch(x, vf, use_kernel=use_kernels, tune=tune)
-    log_ratio = jnp.log(jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
-    qe = quantized_entropy_sweep(x, epss, bins, use_kernel=use_kernels,
-                                 tune=tune)
-    log_qe = jnp.log(jnp.maximum(qe, 1e-3))                 # (k, e)
-    return jnp.stack(
-        [log_qe, jnp.broadcast_to(log_ratio[:, None], log_qe.shape)], axis=-1)
+    outs = []
+    if mode in ("features", "both"):
+        sigma = jnp.std(x, axis=tuple(range(1, x.ndim)))
+        if x.ndim == 3:
+            sv = svd_trunc_batch(x, vf, use_kernel=use_kernels, tune=tune)
+        else:
+            sv = hosvd_trunc_batch(x, vf, use_kernel=use_kernels, tune=tune)
+        log_ratio = jnp.log(jnp.maximum(sv, 1e-6) / jnp.maximum(sigma, 1e-12))
+        qe = quantized_entropy_sweep(x, epss, bins, use_kernel=use_kernels,
+                                     tune=tune)
+        log_qe = jnp.log(jnp.maximum(qe, 1e-3))             # (k, e)
+        outs.append(jnp.stack(
+            [log_qe, jnp.broadcast_to(log_ratio[:, None], log_qe.shape)],
+            axis=-1))
+    if mode in ("quality", "both"):
+        from repro.kernels.quality import ops as quality_ops
+        outs.append(quality_ops.quality_sweep(
+            x, epss, use_kernel=use_kernels))
+    return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=-1)
 
 
 _features_sweep_traced = jax.jit(
     _features_sweep_impl,
-    static_argnames=("vf", "bins", "use_kernels", "tune"))
+    static_argnames=("vf", "bins", "use_kernels", "tune", "mode"))
 
 # zero-copy variant for the serving hot path: the caller hands over the
 # (padded) input stack and XLA may reuse its buffer for intermediates.
@@ -380,7 +405,7 @@ _features_sweep_traced = jax.jit(
 # so it shares _features_sweep_impl and tests assert bit-equality.
 _features_sweep_donated = jax.jit(
     _features_sweep_impl,
-    static_argnames=("vf", "bins", "use_kernels", "tune"),
+    static_argnames=("vf", "bins", "use_kernels", "tune", "mode"),
     donate_argnums=(0,))
 
 
@@ -392,6 +417,7 @@ def features_sweep(
     sharded: bool | None = None,
     mesh=None,
     gather: bool = True,
+    quality: bool = False,
 ) -> jnp.ndarray:
     """The full predictor tensor in one pass: (k, m, n) x (e,) -> (k, e, 2).
 
@@ -412,7 +438,46 @@ def features_sweep(
     and ``sharded=True`` requires a mesh (raising if none is usable).
     ``gather=False`` returns the padded per-device result still sharded
     over the mesh (see ``repro.dist.sweep.features_sweep_sharded``).
+
+    ``quality=True`` makes the same single pass also emit the fused
+    PSNR/NRMSE tensor of the quantization proxy (``kernels/quality``)
+    and returns the pair ``(features (k, e, 2), quality (k, e, 2))`` --
+    both halves of the ratio-quality frontier from one read of the data.
     """
+    out = _sweep_dispatch(slices, epss, cfg, sharded=sharded, mesh=mesh,
+                          gather=gather,
+                          mode="both" if quality else "features")
+    if quality:
+        return out[..., :2], out[..., 2:]
+    return out
+
+
+def quality_sweep(
+    slices: jnp.ndarray,
+    epss,
+    cfg: PredictorConfig = PredictorConfig(),
+    *,
+    sharded: bool | None = None,
+    mesh=None,
+    gather: bool = True,
+) -> jnp.ndarray:
+    """The quality half of the frontier: (k, ...) x (e,) -> (k, e, 2).
+
+    Column [..., 0] is the PSNR (dB) and [..., 1] the NRMSE of the
+    quantization proxy (quantize-dequantize at each error bound, same
+    saturating quantizer as the q-ent predictor), computed by the fused
+    ``kernels/quality`` sweep in one read of the data.  Sharding routes
+    exactly like :func:`features_sweep` (same auto-mesh rules), and the
+    tensor is bitwise identical across the jnp reference, the Pallas
+    kernel, sharded, streamed, and served paths.
+    """
+    return _sweep_dispatch(slices, epss, cfg, sharded=sharded, mesh=mesh,
+                           gather=gather, mode="quality")
+
+
+def _sweep_dispatch(slices, epss, cfg, *, sharded, mesh, gather, mode):
+    """Shared routing for the mode-selected sweeps (validation, auto-
+    sharding, single-device fallthrough)."""
     if slices.ndim not in (3, 4):
         raise ValueError(
             f"features_sweep expects a (k, m, n) slice stack or a "
@@ -433,10 +498,11 @@ def features_sweep(
                 "activate one via dist.sharding.use_mesh)")
         if use_mesh is not None:
             return dsweep.features_sweep_sharded(
-                slices, epss, cfg, mesh=use_mesh, gather=gather)
+                slices, epss, cfg, mesh=use_mesh, gather=gather, mode=mode)
     return _features_sweep_traced(
         slices, epss, vf=variance_fraction_for(cfg, slices.ndim),
-        bins=cfg.qent_bins, use_kernels=cfg.use_kernels, tune=cfg.tune)
+        bins=cfg.qent_bins, use_kernels=cfg.use_kernels, tune=cfg.tune,
+        mode=mode)
 
 
 @functools.partial(jax.jit, static_argnames=("bins", "use_kernels", "tune"))
@@ -564,23 +630,37 @@ class FeaturizationEngine:
         self.cfg = cfg
 
     def sweep(self, slices: jnp.ndarray, epss, *, sharded: bool | None = None,
-              mesh=None, gather: bool = True) -> jnp.ndarray:
+              mesh=None, gather: bool = True,
+              quality: bool = False) -> jnp.ndarray:
+        """One-pass predictor tensor; ``quality=True`` returns the
+        ``(features, quality)`` pair from the same single read (the
+        fused ratio-quality frontier, see :func:`features_sweep`)."""
         return features_sweep(slices, epss, self.cfg, sharded=sharded,
-                              mesh=mesh, gather=gather)
+                              mesh=mesh, gather=gather, quality=quality)
+
+    def quality(self, slices: jnp.ndarray, epss, *,
+                sharded: bool | None = None, mesh=None,
+                gather: bool = True) -> jnp.ndarray:
+        """The (k, e, 2) PSNR/NRMSE tensor alone (:func:`quality_sweep`)."""
+        return quality_sweep(slices, epss, self.cfg, sharded=sharded,
+                             mesh=mesh, gather=gather)
 
     def features(self, slices: jnp.ndarray, eps: float, *,
                  sharded: bool | None = None, mesh=None) -> jnp.ndarray:
         return self.sweep(slices, [eps], sharded=sharded, mesh=mesh)[:, 0, :]
 
     def stream(self, source, name: str, epss, *, stream=None, mesh=None,
-               digest=None):
+               digest=None, quality: bool = False):
         """Out-of-core sweep of one :class:`repro.data.source.
         DatasetSource` variable: chunked, double-buffered, bit-equal to
         ``sweep(source.read(name), epss)`` with at most one budgeted
-        chunk resident (see ``repro.core.stream.stream_features``)."""
+        chunk resident (see ``repro.core.stream.stream_features``).
+        ``quality=True`` returns the streamed ``(features, quality)``
+        pair from the same chunk launches."""
         from repro.core import stream as ST
         return ST.stream_features(source, name, epss, self.cfg,
-                                  stream=stream, mesh=mesh, digest=digest)
+                                  stream=stream, mesh=mesh, digest=digest,
+                                  quality=quality)
 
     def cached(self, x: jnp.ndarray, *, features=None, epss=None) -> SliceCache:
         """Per-slice cache; ``features``/``epss`` pre-seed it with

@@ -146,11 +146,18 @@ def stream_features(
     stream: Optional[StreamConfig] = None,
     mesh=None,
     digest: Optional[StreamingDigest] = None,
+    quality: bool = False,
 ) -> np.ndarray:
     """Featurize one variable of ``source`` chunk by chunk: the full
     ``(k, e, 2)`` tensor, bit-equal to ``features_sweep(source.read(
     name), epss, cfg)``, with at most one ``budget_bytes`` chunk of the
     variable resident at a time.
+
+    ``quality=True`` streams the fused "both" sweep -- each chunk launch
+    emits the concatenated (k_chunk, e, 4) features+quality tensor from
+    one read -- and returns the pair ``(features (k, e, 2), quality
+    (k, e, 2))``, each half bit-equal to its in-memory counterpart
+    (``features_sweep`` / ``quality_sweep``).
 
     ``digest``: a :class:`repro.data.source.StreamingDigest` updated
     with every chunk in row order; after the call ``digest.digest()``
@@ -174,9 +181,12 @@ def stream_features(
         raise ValueError(
             f"stream_features expects a (k, m, n) or (k, d, m, n) "
             f"variable, got {name!r} with shape {meta.shape}")
+    mode = "both" if quality else "features"
+    width = PRED.SWEEP_MODE_WIDTHS[mode]
     k = meta.rows
     if k == 0:
-        return np.zeros((0, len(epss_np), 2), np.float32)
+        empty = np.zeros((0, len(epss_np), width), np.float32)
+        return (empty[..., :2], empty[..., 2:]) if quality else empty
     mesh = DS.active_sweep_mesh(mesh)
     multiproc = DS.mesh_spans_processes(mesh)
     if multiproc and digest is not None:
@@ -204,7 +214,7 @@ def stream_features(
             # the result is already on the host
             out = DS.features_sweep_sharded(
                 arr, epss_np, cfg, mesh=mesh, gather=True,
-                process_local=True, global_k=rows, donate=True)
+                process_local=True, global_k=rows, donate=True, mode=mode)
             results[idx] = np.asarray(out, np.float32)
             continue
         # every chunk launches padded to the SAME bucket (the full-chunk
@@ -212,7 +222,7 @@ def stream_features(
         # ragged final chunk included, and the fresh staging copy's
         # upload is donated (zero-copy ingestion)
         out = DS.sweep_padded(arr, epss_np, cfg, k_pad=chunk, mesh=mesh,
-                              donate=True)
+                              donate=True, mode=mode)
         pending.append((idx, out, rows))
         # async dispatch: block only when the in-flight window is full
         # (prefetch=0 keeps the strictly synchronous baseline semantics)
@@ -221,7 +231,10 @@ def stream_features(
             drain_one()
     while pending:
         drain_one()
-    return np.concatenate(results, axis=0)
+    full = np.concatenate(results, axis=0)
+    if quality:
+        return full[..., :2], full[..., 2:]
+    return full
 
 
 def stream_dataset(

@@ -1,4 +1,4 @@
-"""The paper's two production use cases (sections 1 and 5).
+"""The paper's two production use cases (sections 1 and 5), plus UC3.
 
 UC1 -- fixed-ratio configuration: find the error bound at which a compressor
        achieves a target CR.  OptZConfig-style iterative search, but each
@@ -6,6 +6,10 @@ UC1 -- fixed-ratio configuration: find the error bound at which a compressor
        compressor (the paper's >= 8.8x speedup).
 UC2 -- best-compressor selection: rank a set of compressors by predicted CR
        at a fixed error bound without running any of them (>= 7.8x speedup).
+UC3 -- joint ratio-quality configuration (beyond the paper; Jin et al.,
+       arXiv 2111.09815): the cheapest (compressor, eb) meeting a PSNR
+       floor AND a CR floor simultaneously, by bisection over the
+       monotone joint frontier (:func:`find_setting`).
 
 Cross-error-bound modelling follows section 4.4: per-eb regressions are fit
 on a small grid of error bounds and model predictions are interpolated in
@@ -15,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
@@ -23,6 +27,7 @@ import jax.numpy as jnp
 from repro.core import pipeline as PL
 from repro.core import predictors as P
 from repro.core.regression import predict_fast
+from repro.kernels.quality import PSNR_CAP
 from repro import compressors as C
 
 
@@ -45,6 +50,53 @@ def _clamp_cr(value) -> float:
 
 
 @dataclasses.dataclass
+class QualityTable:
+    """Per-grid-eb quality models riding next to the CR models.
+
+    For each grid eb a least-squares affine map from the 2 predictor
+    features to the quantization proxy's PSNR (labels come from the
+    fused ``kernels/quality`` half of the SAME training sweep -- zero
+    extra passes over the data, and UC3 queries ride the same
+    SliceCache / coalesced-launch features UC1 does).  The proxy PSNR is
+    compressor-independent (it depends only on the data and the eb), but
+    the table lives per :class:`EbGridModel` so each compressor's grid
+    carries its own quality curve.
+    """
+    coef: np.ndarray                      # (e, 3): [w_qent, w_trunc, bias]
+    mean_psnr: np.ndarray                 # (e,) training-set mean PSNR
+    mean_nrmse: np.ndarray                # (e,) training-set mean NRMSE
+
+    @staticmethod
+    def fit(feats, qual) -> "QualityTable":
+        """(k, e, 2) features x (k, e, 2) [psnr, nrmse] labels -> table.
+
+        ``lstsq`` returns the min-norm solution, so degenerate designs
+        (k=1, constant features) fit cleanly instead of raising."""
+        feats = np.asarray(feats, np.float64)
+        qual = np.asarray(qual, np.float64)
+        k, e, _ = feats.shape
+        coef = np.zeros((e, 3), np.float64)
+        for i in range(e):
+            a = np.concatenate([feats[:, i, :], np.ones((k, 1))], axis=1)
+            y = np.clip(qual[:, i, 0], -PSNR_CAP, PSNR_CAP)
+            sol, *_ = np.linalg.lstsq(a, y, rcond=None)
+            if not np.all(np.isfinite(sol)):
+                sol = np.array([0.0, 0.0, float(np.mean(y))])
+            coef[i] = sol
+        return QualityTable(coef, qual[:, :, 0].mean(axis=0),
+                            qual[:, :, 1].mean(axis=0))
+
+    def predict_one(self, i: int, feats) -> float:
+        """Predicted proxy PSNR (dB) at grid index ``i`` from a (2,)
+        feature vector, clamped to the kernel's +-PSNR_CAP band."""
+        f = np.asarray(feats, np.float64).reshape(-1)
+        v = self.coef[i, 0] * f[0] + self.coef[i, 1] * f[1] + self.coef[i, 2]
+        if not np.isfinite(v):
+            v = self.mean_psnr[i]
+        return float(np.clip(v, -PSNR_CAP, PSNR_CAP))
+
+
+@dataclasses.dataclass
 class EbGridModel:
     """CR predictor across error bounds: one model per grid eb +
     log-linear interpolation of log(CR) between neighbouring grid points."""
@@ -52,6 +104,7 @@ class EbGridModel:
     models: list                          # CRPredictor per eb
     name: str = ""
     cfg: P.PredictorConfig = dataclasses.field(default_factory=P.PredictorConfig)
+    quality: Optional[QualityTable] = None
 
     @staticmethod
     def train(
@@ -80,9 +133,11 @@ class EbGridModel:
         # the training-time compressor runs execute on local shards only
         # (partitioned over processes, all-gathered as a (k, e) table).
         from repro.dist import sweep as DS
-        feats = np.asarray(
-            P.get_engine(cfg).sweep(slices, np.asarray(ebs, np.float64),
-                                    mesh=mesh))
+        # quality=True: the SAME pass also emits the fused PSNR/NRMSE
+        # tensor, which becomes the training labels of the quality table
+        feats, qual = P.get_engine(cfg).sweep(
+            slices, np.asarray(ebs, np.float64), mesh=mesh, quality=True)
+        feats = np.asarray(feats)
         # the compressor-run partition reuses the SAME mesh the sweep
         # sharded over (its processes), not an ad-hoc runtime-wide split
         cr_table = DS.training_crs(comp, slices, ebs,
@@ -92,7 +147,8 @@ class EbGridModel:
             models.append(PL.CRPredictor.train_from_features(
                 jnp.asarray(feats[:, i, :]), jnp.asarray(cr_table[:, i]),
                 float(eps), model, cfg, ndim))
-        return EbGridModel(np.asarray(ebs, np.float64), models, compressor, cfg)
+        return EbGridModel(np.asarray(ebs, np.float64), models, compressor,
+                           cfg, QualityTable.fit(feats, np.asarray(qual)))
 
     @property
     def ndim(self) -> int:
@@ -149,6 +205,39 @@ class EbGridModel:
         f1 = feat_cache(self.ebs[i1])[None]
         c1 = _clamp_cr(predict_fast(self.models[i1].model, f1)[0])
         return float(np.exp((1 - t) * np.log(c0) + t * np.log(c1)))
+
+    def predict_psnr(self, data: jnp.ndarray, eps: float,
+                     feat_cache=None) -> float:
+        """Predicted proxy PSNR (dB) for one slice/volume at an
+        arbitrary eb: the per-grid-eb quality models evaluated on the
+        same cached features as :meth:`predict`, linear in log(eps)
+        between grid points (PSNR is already a log-domain quantity)."""
+        if self.quality is None:
+            raise ValueError(
+                f"EbGridModel '{self.name}' has no quality table; retrain "
+                "with EbGridModel.train (quality models are fit from the "
+                "same fused sweep that features the CR models)")
+        self._check_rank(data)
+        if feat_cache is None:
+            feat_cache = P.get_engine(self.cfg).cached(data)
+        le = np.log(eps)
+        lg = self.log_ebs()
+        if le <= lg[0]:
+            i0, i1, t = 0, 0, 0.0
+        elif le >= lg[-1]:
+            i0, i1, t = len(lg) - 1, len(lg) - 1, 0.0
+        else:
+            i1 = int(np.searchsorted(lg, le))
+            if le == lg[i1]:
+                i0, t = i1, 0.0
+            else:
+                i0 = i1 - 1
+                t = (le - lg[i0]) / (lg[i1] - lg[i0])
+        p0 = self.quality.predict_one(i0, feat_cache(self.ebs[i0]))
+        if i1 == i0:
+            return p0
+        p1 = self.quality.predict_one(i1, feat_cache(self.ebs[i1]))
+        return float((1 - t) * p0 + t * p1)
 
 
 def find_error_bound_for_cr(
@@ -268,6 +357,158 @@ def best_compressor(
     preds = {name: float(predict_fast(m.model, feats)[0])
              for name, m in models.items()}
     return max(preds, key=preds.get), preds
+
+
+@dataclasses.dataclass(frozen=True)
+class JointSetting:
+    """UC3 result: the cheapest (compressor, eb) meeting both floors.
+
+    "Cheapest" = largest predicted CR among the settings that satisfy
+    PSNR >= psnr_floor AND CR >= cr_floor.  ``feasible=False`` is the
+    TYPED infeasible result: ``compressor``/``eb`` then carry the
+    best-achievable diagnostic setting (highest CR inside the quality
+    region, or the least-bad quality point when no compressor reaches
+    the PSNR floor at all) and ``reason`` says which floor failed.
+    ``candidates`` holds the per-compressor frontier diagnostics.
+    """
+    feasible: bool
+    compressor: Optional[str]
+    eb: Optional[float]
+    predicted_cr: Optional[float]
+    predicted_psnr: Optional[float]
+    reason: str = ""
+    candidates: Dict[str, dict] = dataclasses.field(default_factory=dict)
+
+
+def find_setting(
+    models: Dict[str, EbGridModel],
+    data: jnp.ndarray,
+    *,
+    cr_floor: float,
+    psnr_floor: float,
+    tol: float = 1e-3,
+    max_iters: int = 48,
+    feat_cache=None,
+) -> JointSetting:
+    """UC3: cheapest (compressor, eb) with PSNR >= ``psnr_floor`` and
+    CR >= ``cr_floor``, via bisection over the monotone joint frontier.
+
+    Per compressor the grid PSNR curve is monotonized nonincreasing in
+    eb and the grid CR curve nondecreasing (both physically monotone;
+    monotonization absorbs regression noise), so the quality-feasible
+    region is the eb interval [grid floor, eb_q] and the best CR inside
+    it sits at eb_q -- found by bisection on log(eb) with the invariant
+    ``psnr(lo) >= floor > psnr(hi)``, then SNAPPED UP to the largest
+    quality-feasible grid eb.  The snap makes the search grid-complete
+    regardless of ``max_iters``: whenever some grid point satisfies both
+    (monotonized) floors, the returned setting is feasible, because
+    eb_q never undershoots a feasible grid point and CR is
+    nondecreasing toward it.
+
+    ``feat_cache``: shared eps -> (2,) feature source covering every
+    model's grid ebs (the serving layer seeds one from coalesced
+    launches); when None, one engine cache per distinct grid is
+    prefetched here -- featurization still happens once, not per
+    compressor.  Ties prefer the lexicographically first compressor
+    name (deterministic across runs).
+    """
+    if not models:
+        raise ValueError(
+            "find_setting needs at least one trained EbGridModel; got an "
+            "empty models dict")
+    ndims = {m.ndim for m in models.values()}
+    if len(ndims) > 1:
+        raise ValueError(
+            f"find_setting models mix training ndims {sorted(ndims)}; "
+            "features are shared across models, so all must be trained "
+            "on the same data rank")
+    missing = sorted(n for n, m in models.items() if m.quality is None)
+    if missing:
+        raise ValueError(
+            f"find_setting needs a quality table on every model; missing "
+            f"on {missing} (retrain with EbGridModel.train)")
+    first = next(iter(models.values()))
+    first._check_rank(data)
+    if feat_cache is None:
+        cfgs = {m.cfg for m in models.values()}
+        if len(cfgs) > 1:
+            raise ValueError(
+                "find_setting models mix predictor configs; features are "
+                "shared across models, so all must use one config")
+        feat_cache = P.get_engine(first.cfg).cached(data)
+        for grid in {tuple(float(e) for e in m.ebs) for m in models.values()}:
+            feat_cache.prefetch(np.asarray(grid, np.float64))
+
+    candidates: Dict[str, dict] = {}
+    best: Optional[str] = None
+    for name in sorted(models):
+        gm = models[name]
+        lg = gm.log_ebs()
+        pg = np.minimum.accumulate(
+            [gm.predict_psnr(data, float(e), feat_cache) for e in gm.ebs])
+        cg = np.maximum.accumulate(
+            [gm.predict(data, float(e), feat_cache) for e in gm.ebs])
+        lcg = np.log(cg)          # cg is _clamp_cr-positive, log is finite
+
+        if pg[0] < psnr_floor:
+            # even the finest grid eb misses the quality floor
+            candidates[name] = {
+                "quality_ok": False, "cr_ok": False, "eb": float(gm.ebs[0]),
+                "psnr": float(pg[0]), "cr": float(cg[0])}
+            continue
+        if pg[-1] >= psnr_floor:
+            le_q = float(lg[-1])
+        else:
+            lo, hi = float(lg[0]), float(lg[-1])
+            for _ in range(max_iters):
+                if hi - lo < tol:
+                    break
+                mid = 0.5 * (lo + hi)
+                if float(np.interp(mid, lg, pg)) >= psnr_floor:
+                    lo = mid
+                else:
+                    hi = mid
+            # grid-snap: never land below the largest quality-feasible
+            # grid eb (grid-completeness must not depend on max_iters)
+            j_star = int(np.nonzero(pg >= psnr_floor)[0][-1])
+            le_q = max(lo, float(lg[j_star]))
+        eb_q = float(np.exp(le_q))
+        # exp(interp(log cr)) can round a hair BELOW the exact grid
+        # value; the curve is nondecreasing, so the last grid point at
+        # or under le_q is an exact lower bound -- without it a floor
+        # sitting exactly on the frontier tests infeasible by one ulp
+        jlo = int(np.searchsorted(lg, le_q + 1e-12, side="right") - 1)
+        cr_q = float(max(np.exp(np.interp(le_q, lg, lcg)), cg[jlo]))
+        psnr_q = float(np.interp(le_q, lg, pg))
+        cr_ok = cr_q >= cr_floor
+        candidates[name] = {
+            "quality_ok": True, "cr_ok": bool(cr_ok), "eb": eb_q,
+            "psnr": psnr_q, "cr": cr_q}
+        if cr_ok and (best is None or cr_q > candidates[best]["cr"]):
+            best = name
+
+    if best is not None:
+        c = candidates[best]
+        return JointSetting(
+            True, best, c["eb"], c["cr"], c["psnr"],
+            reason="cheapest setting meeting both floors", candidates=candidates)
+    q_ok = {n: c for n, c in candidates.items() if c["quality_ok"]}
+    if q_ok:
+        name = min(q_ok, key=lambda n: (-q_ok[n]["cr"], n))
+        c = q_ok[name]
+        return JointSetting(
+            False, name, c["eb"], c["cr"], c["psnr"],
+            reason=(f"no compressor reaches CR >= {cr_floor:g} inside the "
+                    f"PSNR >= {psnr_floor:g} region; best achievable CR is "
+                    f"{c['cr']:.3g}"),
+            candidates=candidates)
+    name = min(candidates, key=lambda n: (-candidates[n]["psnr"], n))
+    c = candidates[name]
+    return JointSetting(
+        False, name, c["eb"], c["cr"], c["psnr"],
+        reason=(f"PSNR floor {psnr_floor:g} is unreachable on every grid "
+                f"(best {c['psnr']:.1f} dB at the finest eb)"),
+        candidates=candidates)
 
 
 def best_compressor_exhaustive(

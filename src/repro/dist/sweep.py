@@ -259,7 +259,7 @@ def _pad_block(block: np.ndarray, per: int, shape_tail: tuple,
 
 def _features_sweep_multihost(slices, epss, cfg, mesh: Mesh, gather: bool,
                               process_local: bool, global_k: Optional[int],
-                              donate: bool = False):
+                              donate: bool = False, mode: str = "features"):
     """Process-spanning sweep launch (see module docstring): per-process
     ingestion -> one collective shard_map -> ``process_allgather``."""
     from repro.core import predictors as PRED
@@ -303,7 +303,7 @@ def _features_sweep_multihost(slices, epss, cfg, mesh: Mesh, gather: bool,
         cfg.use_kernels, cfg.tune,
         # garr is assembled fresh from host memory every launch, so
         # donating it back to XLA is always safe here
-        donate)(garr, eps_g)
+        donate, mode)(garr, eps_g)
 
     if gather:
         return jnp.asarray(gather_rows(out)[:k])
@@ -316,13 +316,16 @@ def _features_sweep_multihost(slices, epss, cfg, mesh: Mesh, gather: bool,
 @functools.lru_cache(maxsize=32)
 def _sharded_sweep_fn(mesh: Mesh, axes: tuple, rank: int, vf: float,
                       bins: int, use_kernels: bool, tune=None,
-                      donate: bool = False):
+                      donate: bool = False, mode: str = "features"):
     """jit'd shard_map sweep for one (mesh, stack rank, config); cached so
     repeated sweeps (serving, training grids) reuse the compiled
     executable.  ``rank`` is the stack's ndim: 3 for (k, m, n) slice
     stacks, 4 for (k, d, m, n) volume stacks -- only dim 0 is sharded
     either way.  ``donate=True`` compiles a variant that donates the
-    input stack's buffer (identical math; serving hot path)."""
+    input stack's buffer (identical math; serving hot path).  ``mode``
+    selects the emitted tensor ("features" | "quality" | "both", see
+    ``predictors.SWEEP_MODE_WIDTHS``) -- the output stays rank-3 at
+    every width, so the specs below are mode-agnostic."""
     from repro.core import predictors as PRED
 
     part = axes[0] if len(axes) == 1 else axes
@@ -332,7 +335,7 @@ def _sharded_sweep_fn(mesh: Mesh, axes: tuple, rank: int, vf: float,
         # single-device sweep body: sharded == single-device to f32 tol
         return PRED._features_sweep_impl(
             local_slices, epss, vf=vf, bins=bins, use_kernels=use_kernels,
-            tune=tune)
+            tune=tune, mode=mode)
 
     f = S.shard_map(
         body, mesh=mesh,
@@ -352,6 +355,7 @@ def features_sweep_sharded(
     process_local: bool = False,
     global_k: Optional[int] = None,
     donate: bool = False,
+    mode: str = "features",
 ) -> jnp.ndarray:
     """``features_sweep`` sharded over the slice axis of ``mesh``.
 
@@ -377,6 +381,10 @@ def features_sweep_sharded(
     the caller's ``slices`` array is consumed and must not be reused
     (numpy inputs are unaffected -- only their fresh device upload is
     donated).
+
+    ``mode`` selects the emitted tensor exactly as in
+    ``predictors._features_sweep_impl`` ("features" | "quality" |
+    "both"); pad-row masking and gathering are width-agnostic.
     """
     from repro.core import predictors as PRED
     cfg = cfg if cfg is not None else PRED.PredictorConfig()
@@ -386,7 +394,9 @@ def features_sweep_sharded(
             raise ValueError(
                 "process_local=True needs a process-spanning mesh "
                 "(dist_init + make_sweep_mesh); no usable mesh is active")
-        return PRED.features_sweep(slices, epss, cfg, sharded=False)
+        return PRED._sweep_dispatch(jnp.asarray(slices), epss, cfg,
+                                    sharded=False, mesh=None, gather=True,
+                                    mode=mode)
     if slices.ndim not in (3, 4):
         raise ValueError(
             f"features_sweep_sharded expects (k, m, n) or (k, d, m, n), "
@@ -394,7 +404,8 @@ def features_sweep_sharded(
     PRED._validate_eps_positive(epss)
     if mesh_spans_processes(mesh):
         return _features_sweep_multihost(
-            slices, epss, cfg, mesh, gather, process_local, global_k, donate)
+            slices, epss, cfg, mesh, gather, process_local, global_k, donate,
+            mode)
     if process_local:
         raise ValueError(
             "process_local=True is only meaningful on a process-spanning "
@@ -417,7 +428,7 @@ def features_sweep_sharded(
     out = _sharded_sweep_fn(
         mesh, axes, slices.ndim,
         PRED.variance_fraction_for(cfg, slices.ndim), cfg.qent_bins,
-        cfg.use_kernels, cfg.tune, donate)(slices, epss)
+        cfg.use_kernels, cfg.tune, donate, mode)(slices, epss)
 
     if gather:
         out = out[:k]                                   # drop pad rows
@@ -441,6 +452,7 @@ def sweep_padded(
     k_pad: Optional[int] = None,
     mesh: Optional[Mesh] = None,
     donate: bool = False,
+    mode: str = "features",
 ) -> jnp.ndarray:
     """One coalesced sweep launch over a padded request batch.
 
@@ -476,6 +488,10 @@ def sweep_padded(
     and donated regardless.  Donation never changes the result -- only
     buffer lifetime -- and donated launches are asserted bit-equal to
     non-donated ones in tests/test_tune.py.
+
+    ``mode`` selects the emitted tensor ("features" | "quality" |
+    "both") -- the quality launcher in ``serve/method.py`` rides this
+    exact entry point with ``mode="quality"``.
     """
     from repro.core import predictors as PRED
     cfg = cfg if cfg is not None else PRED.PredictorConfig()
@@ -500,12 +516,14 @@ def sweep_padded(
         ext = S._mesh_extent(mesh, slice_axes(mesh))
         if k_pad >= ext and k_pad % ext == 0:
             return features_sweep_sharded(
-                slices, epss, cfg, mesh=mesh, gather=False, donate=donate)
+                slices, epss, cfg, mesh=mesh, gather=False, donate=donate,
+                mode=mode)
     fn = (PRED._features_sweep_donated if donate
           else PRED._features_sweep_traced)
     return fn(
         slices, epss, vf=PRED.variance_fraction_for(cfg, slices.ndim),
-        bins=cfg.qent_bins, use_kernels=cfg.use_kernels, tune=cfg.tune)
+        bins=cfg.qent_bins, use_kernels=cfg.use_kernels, tune=cfg.tune,
+        mode=mode)
 
 
 def scatter_requests(out, sizes: Sequence[int]) -> list:

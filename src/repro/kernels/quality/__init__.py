@@ -1,0 +1,10 @@
+"""Fused per-(slice, eb) quality-metric sweep (PSNR / NRMSE of the
+quantization proxy): jnp reference route in ``ref``, the Pallas kernel in
+``quality``, public dispatch in ``ops``."""
+
+from repro.kernels.quality.ops import quality_sweep  # noqa: F401
+from repro.kernels.quality.ref import (  # noqa: F401
+    DEFAULT_TILE,
+    NRMSE_CAP,
+    PSNR_CAP,
+)

@@ -1,0 +1,71 @@
+"""Public entry point for the fused quality sweep.
+
+``quality_sweep`` owns everything both routes share -- flattening,
+per-slice extrema on the UNPADDED data, zero-padding to a tile multiple,
+the (k, 8, n/8) layout, and the PSNR/NRMSE finalization -- then
+dispatches the SSE reduction to the jnp reference or the Pallas kernel.
+Because the shared pieces are literally the same code and the two SSE
+routes are bit-equal by construction (see ``ref``), the full (k, e, 2)
+quality tensor is bitwise identical whichever route runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quality import ref as _ref
+from repro.quant import validate_eps_positive as _check_eps
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "tile"))
+def _quality_sweep_jit(x, epss, *, use_kernel: bool, tile: int):
+    k = x.shape[0]
+    flat = x.astype(jnp.float32).reshape(k, -1)
+    n = flat.shape[1]
+    vmin = jnp.min(flat, axis=1)
+    vmax = jnp.max(flat, axis=1)
+    pad = (-n) % tile
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((k, pad), jnp.float32)], axis=1)
+    xb = jnp.swapaxes(flat.reshape(k, (n + pad) // 8, 8), 1, 2)
+    if use_kernel:
+        from repro.kernels.quality import quality as _kern
+        sse = _kern.qdq_sse_sweep(xb, epss, tile=tile)
+    else:
+        sse = _ref.sse_sweep(xb, epss, tile)
+    return _ref.quality_from_stats(sse, n, vmin, vmax)
+
+
+def quality_sweep(x: jnp.ndarray, epss, *, use_kernel: bool = False,
+                  tile: int | None = None) -> jnp.ndarray:
+    """(k, ...) stack x (e,) error bounds -> (k, e, 2) [PSNR dB, NRMSE].
+
+    PSNR and NRMSE of the quantization proxy: quantize-dequantize each
+    slice at every error bound (saturating int32 quantizer from
+    ``repro.quant``) and score the reconstruction against the original.
+    Exactly-representable slices report ``PSNR_CAP`` (not inf/NaN);
+    zero-range slices with nonzero error report ``-PSNR_CAP`` and an
+    ``NRMSE_CAP``-clipped NRMSE -- every emitted value is finite.
+
+    One read of the data for the whole eb grid; ``use_kernel=True``
+    routes the SSE reduction through the Pallas kernel (interpret mode
+    off-TPU), bit-equal to the default jnp route.
+
+    The whole entry is jitted: eager elementwise chains compile one op
+    per executable (no multiply-add contraction), so an eager route
+    would NOT be bit-equal to the jitted production paths.  Keeping
+    every route inside a jit is part of the bit-equality contract.
+    """
+    _check_eps(epss)
+    epss = jnp.asarray(epss, jnp.float32).reshape(-1)
+    tile = _ref.DEFAULT_TILE if tile is None else int(tile)
+    c = tile // 8
+    if tile % 8 or c & (c - 1):
+        raise ValueError(
+            f"quality_sweep tile must be 8 * 2**j (fixed balanced "
+            f"reduction tree), got {tile}")
+    return _quality_sweep_jit(jnp.asarray(x), epss, use_kernel=use_kernel,
+                              tile=tile)

@@ -1,0 +1,66 @@
+"""Fused quantize-dequantize SSE Pallas kernel (the quality sweep).
+
+One launch computes the sum of squared QDQ errors for a (k, n) stack of
+flattened slices x an (e,) vector of error bounds: each input tile is
+read from HBM once and quantize-dequantized at every error bound while
+resident in VMEM, exactly like ``kernels/qent``.  The reduction inside a
+tile is the fixed balanced elementwise tree from ``ref.tile_sse`` (the
+same code object), and tiles accumulate across the sequential TPU grid
+in the same order as ``ref.sse_sweep``'s Python loop -- that pairing is
+what makes the kernel route BITWISE equal to the jnp reference.
+
+Unlike qent there is no ``_fit_tile``: the per-eps live tile is a single
+(8, tile/8) f32 block (8 KB at the default tile), nowhere near VMEM
+limits, and the tile size is part of the numerical spec (accumulation
+boundaries move with it), so it must never silently shrink per backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.quality import ref as _ref
+
+DEFAULT_TILE = _ref.DEFAULT_TILE
+
+
+def _quality_sweep_kernel(eps_ref, x_ref, sse_ref, *, n_eps: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        sse_ref[...] = jnp.zeros_like(sse_ref)
+
+    x = x_ref[0]                                     # (8, tile/8): ONE read
+    sse_ref[0, :] += _ref.tile_sse_all_eps(x, eps_ref, n_eps)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def qdq_sse_sweep(xb: jnp.ndarray, epss: jnp.ndarray,
+                  tile: int = DEFAULT_TILE) -> jnp.ndarray:
+    """(k, 8, n/8) tiled stack x (e,) error bounds -> (k, e) f32 SSE.
+
+    ``xb`` is the shared layout produced by ``ops.quality_sweep`` (flat
+    slices zero-padded to a tile multiple, reshaped (k, n/8, 8), axes
+    1/2 swapped).  Grid = (k slices, n/tile tiles), SSE accumulates in
+    the output ref across the sequential grid.
+    """
+    k = xb.shape[0]
+    n = xb.shape[2] * 8
+    (n_eps,) = epss.shape
+    assert n % tile == 0, (n, tile)
+    interpret = jax.default_backend() != "tpu"
+    kernel = functools.partial(_quality_sweep_kernel, n_eps=n_eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(k, n // tile),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 8, tile // 8), lambda s, t: (s, 0, t)),
+        ],
+        out_specs=pl.BlockSpec((1, n_eps), lambda s, t: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n_eps), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(epss, jnp.float32), xb)

@@ -33,6 +33,13 @@ CR.  Per target the eb hitting it interpolates log-log along the
 SMALLEST eb (least distortion) wins, and when none reaches it the
 closest-achieving compressor at the grid ceiling is reported with
 ``feasible: false``.
+
+``--psnr-floor DB`` adds the quality axis (UC3): the SAME streamed pass
+also emits the fused per-(row, eb) PSNR/NRMSE tensor (``quality=True``
+-- one read covers both halves of the ratio-quality frontier), the
+variable's worst-row PSNR curve turns the floor into an eb ceiling, and
+recommendations only call a setting feasible when it meets the CR
+target INSIDE the quality-feasible region.
 """
 from __future__ import annotations
 
@@ -77,34 +84,96 @@ def eb_for_target(ebs: np.ndarray, crs: np.ndarray,
     return float(np.exp(le)), cr
 
 
-def recommend(names, ebs: np.ndarray, var_cr: np.ndarray,
-              targets) -> Dict[str, dict]:
+def recommend(names, ebs: np.ndarray, var_cr: np.ndarray, targets, *,
+              psnr_floor: Optional[float] = None,
+              var_psnr: Optional[np.ndarray] = None) -> Dict[str, dict]:
     """Per-target pick from a (n_comp, e) variable CR table: the
-    feasible compressor with the smallest eb, else the closest."""
+    feasible compressor with the smallest eb, else the closest.
+
+    With ``psnr_floor`` + ``var_psnr`` (the variable's worst-row PSNR
+    per grid eb, compressor-independent -- it measures the quantization
+    proxy), the pick is UC3-shaped: PSNR is monotonized nonincreasing in
+    eb, the floor becomes an eb CEILING (the largest log-eb still
+    meeting it), and only settings at or below the ceiling count as
+    feasible.  Each recommendation then also reports ``predicted_psnr``
+    at its eb and ``psnr_ok``.  When the floor is unreachable even at
+    the finest grid eb every target is infeasible and reports the
+    finest-eb setting (the least-distorted achievable one)."""
+    lg = np.log(ebs)
+    le_ceil = None
+    pm = None
+    if psnr_floor is not None and var_psnr is not None:
+        pm = np.minimum.accumulate(np.asarray(var_psnr, np.float64))
+        if pm[0] < psnr_floor:
+            out = {}
+            for t in targets:
+                ci = int(np.argmax(var_cr[:, 0]))
+                out[f"{float(t):g}"] = {
+                    "compressor": names[ci], "eb": float(ebs[0]),
+                    "predicted_cr": float(var_cr[ci, 0]),
+                    "predicted_psnr": float(pm[0]), "psnr_ok": False,
+                    "feasible": False}
+            return out
+        if pm[-1] >= psnr_floor:
+            le_ceil = float(lg[-1])
+        else:
+            # pm is nonincreasing: reversed it is nondecreasing, the
+            # shape np.interp wants
+            le_ceil = float(np.interp(psnr_floor, pm[::-1], lg[::-1]))
+
+    def psnr_at(le: float) -> Optional[float]:
+        return None if pm is None else float(np.interp(le, lg, pm))
+
     out: Dict[str, dict] = {}
     for t in targets:
         hits = []
         for ci, name in enumerate(names):
             hit = eb_for_target(ebs, var_cr[ci], float(t))
-            if hit is not None:
-                hits.append((hit[0], name, hit[1]))
+            if hit is None:
+                continue
+            if le_ceil is not None and np.log(hit[0]) > le_ceil + 1e-12:
+                continue                # reaches the CR only past the floor
+            hits.append((hit[0], name, hit[1]))
         if hits:
             eb, name, cr = min(hits)
-            out[f"{float(t):g}"] = {"compressor": name, "eb": eb,
-                                    "predicted_cr": cr, "feasible": True}
-        else:
+            rec = {"compressor": name, "eb": eb,
+                   "predicted_cr": cr, "feasible": True}
+        elif le_ceil is None:
             ci = int(np.argmax(var_cr[:, -1]))
-            out[f"{float(t):g}"] = {
-                "compressor": names[ci], "eb": float(ebs[-1]),
-                "predicted_cr": float(var_cr[ci, -1]), "feasible": False}
+            rec = {"compressor": names[ci], "eb": float(ebs[-1]),
+                   "predicted_cr": float(var_cr[ci, -1]), "feasible": False}
+        else:
+            # best achievable CR inside the quality-feasible region:
+            # CR is (monotonized) nondecreasing in eb, so it sits at the
+            # ceiling itself
+            le_cap = min(le_ceil, float(lg[-1]))
+            caps = [float(np.exp(np.interp(
+                le_cap, lg,
+                np.log(np.maximum.accumulate(np.maximum(var_cr[ci], 1e-12))))))
+                for ci in range(len(names))]
+            ci = int(np.argmax(caps))
+            rec = {"compressor": names[ci], "eb": float(np.exp(le_cap)),
+                   "predicted_cr": caps[ci], "feasible": False}
+        if pm is not None:
+            p = psnr_at(float(np.log(rec["eb"])))
+            rec["predicted_psnr"] = p
+            rec["psnr_ok"] = bool(p >= psnr_floor - 1e-9)
+        out[f"{float(t):g}"] = rec
     return out
 
 
 def advise_variable(source: SRC.DatasetSource, name: str, *,
                     compressors, grid_rels, targets, train_rows: int,
                     cfg: PredictorConfig, stream: ST.StreamConfig,
-                    mesh=None, service=None) -> dict:
-    """Train sample models + stream the full variable -> report entry."""
+                    mesh=None, service=None,
+                    psnr_floor: Optional[float] = None) -> dict:
+    """Train sample models + stream the full variable -> report entry.
+
+    ``psnr_floor``: also stream the fused quality tensor (same pass,
+    ``quality=True`` -- on the service path each chunk pairs its advise
+    submission with a ``submit_quality`` riding the same batch windows)
+    and recommend only quality-feasible settings (see
+    :func:`recommend`)."""
     meta = source.meta(name)
     ndim = len(meta.shape) - 1
     sample = source.read_rows(name, 0, min(int(train_rows), meta.rows))
@@ -121,32 +190,54 @@ def advise_variable(source: SRC.DatasetSource, name: str, *,
               for comp in compressors}
 
     digest = SRC.StreamingDigest()
+    var_psnr = None
     if service is not None:
         # chunks ride the service's coalesced launches; futures overlap
         # the next chunk's read exactly like the direct driver's
-        # in-flight window
-        futs = []
+        # in-flight window.  With a quality floor each chunk pairs its
+        # advise submission with a quality submission over the same
+        # rows/ebs, riding the same batch windows.
+        futs, qfuts = [], []
         for _, chunk in source.chunks(name,
                                       budget_bytes=stream.budget_bytes):
             digest.update(chunk)
             futs.append(service.submit_advise(models, chunk))
+            if psnr_floor is not None:
+                qfuts.append(service.submit_quality(chunk, ebs, cfg))
         cr_rows = np.concatenate([f.result()["cr"] for f in futs], axis=0)
+        if qfuts:
+            qual = np.concatenate([f.result() for f in qfuts], axis=0)
+            var_psnr = qual[:, :, 0].min(axis=0)
     else:
-        feats = ST.stream_features(source, name, ebs, cfg, stream=stream,
-                                   mesh=mesh, digest=digest)
+        if psnr_floor is not None:
+            feats, qual = ST.stream_features(
+                source, name, ebs, cfg, stream=stream, mesh=mesh,
+                digest=digest, quality=True)
+            # worst row per eb: the variable meets the floor only when
+            # every row does
+            var_psnr = np.asarray(qual)[:, :, 0].min(axis=0)
+        else:
+            feats = ST.stream_features(source, name, ebs, cfg,
+                                       stream=stream, mesh=mesh,
+                                       digest=digest)
         cr_rows = AdviseMethod.cr_table(models, feats)
 
     var_cr = harmonic_cr(cr_rows)
     names = tuple(models)
-    return {
+    entry = {
         "shape": list(meta.shape), "rows": meta.rows,
         "digest": digest.digest(),
         "eb_grid": [float(e) for e in ebs],
         "value_range": rng,
         "cr_by_compressor": {n: [float(c) for c in var_cr[i]]
                              for i, n in enumerate(names)},
-        "targets": recommend(names, ebs, var_cr, targets),
+        "targets": recommend(names, ebs, var_cr, targets,
+                             psnr_floor=psnr_floor, var_psnr=var_psnr),
     }
+    if var_psnr is not None:
+        entry["psnr_floor"] = float(psnr_floor)
+        entry["psnr_by_eb"] = [float(p) for p in var_psnr]
+    return entry
 
 
 def advise_dataset(source: SRC.DatasetSource, *, compressors=None,
@@ -155,12 +246,15 @@ def advise_dataset(source: SRC.DatasetSource, *, compressors=None,
                    cfg: PredictorConfig = PredictorConfig(),
                    stream: Optional[ST.StreamConfig] = None,
                    mesh=None, service=None,
-                   fields=None) -> dict:
+                   fields=None,
+                   psnr_floor: Optional[float] = None) -> dict:
     """The advisor as a library call (the CLI and ``bench_stream`` both
     route here).  Returns the full report dict."""
     stream = stream if stream is not None else ST.StreamConfig()
     report: dict = {"targets": [float(t) for t in targets],
                     "budget_bytes": stream.budget_bytes, "variables": {}}
+    if psnr_floor is not None:
+        report["psnr_floor"] = float(psnr_floor)
     for name in (fields if fields else source.variables()):
         meta = source.meta(name)
         comps = compressors if compressors else (
@@ -168,7 +262,8 @@ def advise_dataset(source: SRC.DatasetSource, *, compressors=None,
         report["variables"][name] = advise_variable(
             source, name, compressors=comps, grid_rels=grid_rels,
             targets=targets, train_rows=train_rows, cfg=cfg,
-            stream=stream, mesh=mesh, service=service)
+            stream=stream, mesh=mesh, service=service,
+            psnr_floor=psnr_floor)
     return report
 
 
@@ -183,9 +278,13 @@ def _print_report(report: dict, file=sys.stdout) -> None:
               f"digest={var['digest'][:12]}", file=file)
         for t, rec in var["targets"].items():
             note = "" if rec["feasible"] else "  (best achievable)"
+            q = ""
+            if "predicted_psnr" in rec:
+                mark = "" if rec["psnr_ok"] else " <floor"
+                q = f"  psnr={rec['predicted_psnr']:.1f}dB{mark}"
             print(f"  CR>={t:>4}: {rec['compressor']:<16} "
                   f"eb={rec['eb']:.3e}  predicted_cr={rec['predicted_cr']:.2f}"
-                  f"{note}", file=file)
+                  f"{q}{note}", file=file)
 
 
 def main(argv=None) -> dict:
@@ -209,6 +308,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--train-rows", type=int, default=6,
                     help="leading rows per variable the models train on "
                          "(the only compressor executions)")
+    ap.add_argument("--psnr-floor", type=float, default=None,
+                    help="minimum acceptable PSNR (dB) of the "
+                         "quantization proxy; recommendations then pick "
+                         "the cheapest quality-feasible setting (UC3)")
     ap.add_argument("--budget-mb", type=float, default=64.0,
                     help="per-chunk f32 byte budget (device memory cap)")
     ap.add_argument("--prefetch", type=int, default=2,
@@ -247,7 +350,8 @@ def main(argv=None) -> dict:
         report = advise_dataset(
             source, compressors=comps or None, grid_rels=grid_rels,
             targets=targets, train_rows=args.train_rows, stream=stream,
-            mesh=mesh, service=svc, fields=fields or None)
+            mesh=mesh, service=svc, fields=fields or None,
+            psnr_floor=args.psnr_floor)
     finally:
         if svc is not None:
             svc.close()

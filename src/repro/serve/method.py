@@ -488,3 +488,121 @@ class KVGateMethod(ServableMethod):
     def warmup_spec(self, scfg) -> WarmupSpec:
         return WarmupSpec(shapes=((256,),), grid_sizes=(1,),
                           row_buckets=(1, 2))
+
+
+class QualityLauncher(Launcher):
+    """The fused quality sweep (``mode="quality"``): (k, m, n) /
+    (k, d, m, n) stack x (e,) eps vector -> (k, e, 2) [PSNR, NRMSE] rows
+    of the quantization proxy, bit-equal to
+    ``core.predictors.quality_sweep``.
+
+    Quality rows are row-independent and per-eps-independent (PSNR/NRMSE
+    of one slice at one eb reads nothing else), so the coalescing
+    contract holds unchanged.  The wire config is the ``("quality",
+    PredictorConfig)`` pair from the item keys -- a distinct key space
+    from the feature sweep's bare config, so quality rows never collide
+    with feature rows in the cross-request cache.
+    """
+
+    name = "quality"
+    row_width = 2
+
+    def launch(self, stack, epss, cfg, k_pad, mesh):
+        return DS.sweep_padded(stack, epss, cfg[1], k_pad=k_pad, mesh=mesh,
+                               donate=True, mode="quality")
+
+    def follower_cfg(self, scfg):
+        return ("quality", scfg.pcfg)
+
+
+class QualityMethod(ServableMethod):
+    """(k, m, n) / (k, d, m, n) stack x (e,) ebs -> (k, e, 2) [PSNR dB,
+    NRMSE] rows, bit-equal to ``quality_sweep(slices, epss)``."""
+
+    name = "quality"
+
+    def __init__(self, launcher: Optional[QualityLauncher] = None,
+                 batch_buckets=None):
+        super().__init__(launcher if launcher is not None
+                         else QualityLauncher(), batch_buckets)
+
+    def pre_process(self, svc, slices, epss, cfg=None) -> MethodRequest:
+        cfg = svc._check_cfg(cfg if cfg is not None else svc.scfg.pcfg)
+        arr = np.asarray(slices, np.float32)
+        if arr.ndim not in (3, 4):
+            raise ValueError(
+                f"submit_quality expects (k, m, n) or (k, d, m, n), "
+                f"got {arr.shape}")
+        eps_keys = tuple(_f32(e) for e in np.asarray(epss).reshape(-1))
+        if not eps_keys:
+            raise ValueError("submit_quality needs at least one eb")
+        items = [Item((slice_digest(s), ("quality", cfg)), s, eps_keys)
+                 for s in arr]
+        return MethodRequest(self, items, Future(),
+                             {"eps_keys": eps_keys}, time.perf_counter())
+
+    def post_process(self, req, rows_for):
+        return np.stack([rows_for(it) for it in req.items])
+
+
+class FindSettingMethod(ServableMethod):
+    """UC3: cheapest (compressor, eb) meeting a PSNR floor AND a CR
+    floor, bit-equal to ``usecases.find_setting`` -- the grid
+    featurization rides the shared sweep launch / cross-request cache
+    (quality is PREDICTED from the same feature rows via each model's
+    :class:`~repro.core.usecases.QualityTable`, so UC3 costs zero extra
+    launches over UC1)."""
+
+    name = "find_setting"
+
+    def pre_process(self, svc, models: Dict[str, Any], data,
+                    cr_floor: float, psnr_floor: float,
+                    tol: float = 1e-3, max_iters: int = 48) -> MethodRequest:
+        if not models:
+            raise ValueError("submit_find_setting needs trained models")
+        missing = sorted(n for n, m in models.items() if m.quality is None)
+        if missing:
+            raise ValueError(
+                f"submit_find_setting needs a quality table on every "
+                f"model; missing on {missing} (retrain with "
+                f"EbGridModel.train)")
+        cfgs = {m.cfg for m in models.values()}
+        if len(cfgs) > 1:
+            raise ValueError(
+                "submit_find_setting models mix predictor configs; "
+                "features are shared across models, so all must use one "
+                "config")
+        cfg = svc._check_cfg(next(iter(cfgs)))
+        ndims = {m.ndim for m in models.values()}
+        x = np.asarray(data, np.float32)
+        if len(ndims) > 1 or x.ndim != next(iter(ndims)):
+            raise ValueError(
+                f"submit_find_setting: models trained on "
+                f"{sorted(ndims)}-D data must all match the request rank, "
+                f"got {x.shape}")
+        # one item over the sorted UNION of every model's grid ebs: one
+        # coalesced featurization covers every compressor's frontier
+        union = sorted({_f32(e) for m in models.values()
+                        for e in np.asarray(m.ebs)})
+        item = Item((slice_digest(x), cfg), x, tuple(union))
+        return MethodRequest(
+            self, [item], Future(),
+            {"models": dict(models), "data": data, "union": union,
+             "cr_floor": cr_floor, "psnr_floor": psnr_floor,
+             "tol": tol, "max_iters": max_iters},
+            time.perf_counter())
+
+    def post_process(self, req, rows_for):
+        models = req.payload["models"]
+        union = req.payload["union"]
+        feats = rows_for(req.items[0])                     # (len(union), 2)
+        cfg = next(iter(models.values())).cfg
+        feat_cache = P.get_engine(cfg).cached(
+            req.payload["data"], features=feats,
+            epss=np.asarray(union, np.float64))
+        return UC.find_setting(
+            models, req.payload["data"],
+            cr_floor=req.payload["cr_floor"],
+            psnr_floor=req.payload["psnr_floor"],
+            tol=req.payload["tol"], max_iters=req.payload["max_iters"],
+            feat_cache=feat_cache)

@@ -20,8 +20,9 @@ from __future__ import annotations
 from typing import Dict, List, Tuple
 
 from repro.serve.method import (AdviseMethod, BestCompressorMethod,
-                                FeaturizeMethod, FindEbMethod, KVGateMethod,
-                                Launcher, ServableMethod, SweepLauncher)
+                                FeaturizeMethod, FindEbMethod,
+                                FindSettingMethod, KVGateMethod, Launcher,
+                                QualityMethod, ServableMethod, SweepLauncher)
 
 
 class MethodRegistry:
@@ -69,10 +70,13 @@ class MethodRegistry:
 def default_registry() -> MethodRegistry:
     """The built-in platform: the paper's three request kinds plus the
     streaming compression advisor over one shared sweep launcher, plus
-    the serving engine's KV-cache gate.  A fresh instance per call --
-    services never share mutable registry state.  ``advise`` registers
-    LAST so the launcher wire-id order (sweep=0, int8cr=1) is unchanged
-    from the pre-advisor platform (it reuses the sweep launcher)."""
+    the serving engine's KV-cache gate, plus the ratio-quality frontier
+    pair (UC3 ``find_setting`` riding the sweep launcher; the fused
+    quality sweep on its own launcher).  A fresh instance per call --
+    services never share mutable registry state.  Registration is
+    APPEND-ONLY so launcher wire ids (sweep=0, int8cr=1, quality=2) are
+    stable across platform growth: ``advise`` and ``find_setting`` reuse
+    the sweep launcher; ``quality`` registers last."""
     reg = MethodRegistry()
     sweep = SweepLauncher()
     reg.register(FeaturizeMethod(sweep))
@@ -80,4 +84,6 @@ def default_registry() -> MethodRegistry:
     reg.register(BestCompressorMethod(sweep))
     reg.register(KVGateMethod())
     reg.register(AdviseMethod(sweep))
+    reg.register(FindSettingMethod(sweep))
+    reg.register(QualityMethod())
     return reg

@@ -534,6 +534,27 @@ class SweepService:
         batch window (features are compressor-independent)."""
         return self.submit("advise", models, stack)
 
+    def submit_quality(self, slices, epss,
+                       cfg: Optional[P.PredictorConfig] = None) -> Future:
+        """Fused quality sweep through the service: (k, m, n) or
+        (k, d, m, n) stack x (e,) ebs -> Future[(k, e, 2) [PSNR dB,
+        NRMSE] np.ndarray], bit-equal to ``quality_sweep(slices,
+        epss)``.  Quality rows coalesce on their own launcher and key
+        space, so they never collide with feature rows in the
+        cross-request cache."""
+        return self.submit("quality", slices, epss, cfg)
+
+    def submit_find_setting(self, models: Dict[str, object], data,
+                            cr_floor: float, psnr_floor: float,
+                            tol: float = 1e-3,
+                            max_iters: int = 48) -> Future:
+        """UC3 through the service: Future[JointSetting], bit-equal to
+        ``usecases.find_setting``.  One coalesced featurization over the
+        union of every model's grid ebs covers all compressors; quality
+        is predicted from the same rows (zero extra launches)."""
+        return self.submit("find_setting", models, data, cr_floor,
+                           psnr_floor, tol=tol, max_iters=max_iters)
+
     # sync conveniences ------------------------------------------------
 
     def featurize(self, slices, epss, cfg=None) -> np.ndarray:
@@ -550,6 +571,13 @@ class SweepService:
 
     def advise(self, models, stack) -> dict:
         return self.submit_advise(models, stack).result()
+
+    def quality(self, slices, epss, cfg=None) -> np.ndarray:
+        return self.submit_quality(slices, epss, cfg).result()
+
+    def find_setting(self, models, data, cr_floor, psnr_floor, **kw):
+        return self.submit_find_setting(models, data, cr_floor,
+                                        psnr_floor, **kw).result()
 
     def stats(self) -> dict:
         with self._cond:

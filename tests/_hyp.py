@@ -1,9 +1,21 @@
 """hypothesis, or a deterministic stand-in when it isn't installed.
 
 The fallback turns ``@given(s1, s2, ...)`` into an eager sweep over a
-small fixed sample grid per strategy — far weaker than real property
+small fixed sample set per strategy — far weaker than real property
 testing, but it keeps the suite collecting and the properties exercised
 in minimal environments (CI images without hypothesis).
+
+Fallback sampling is DETERMINISTIC: every strategy derives its samples
+from a seeded PRNG keyed by the strategy's own parameters, so two runs
+(or two machines) sweep identical points.  Each strategy mixes
+
+* the range boundaries (``min``/``max`` — property bugs love edges),
+* boundary specials that fit the range (0.0, an f32 subnormal, the
+  f32 maximum — the values library code mishandles first), and
+* a few seeded random interior points,
+
+capped at six samples per axis so a three-strategy ``@given`` stays
+under ~216 cases.
 """
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
@@ -11,22 +23,51 @@ try:
     HAVE_HYPOTHESIS = True
 except ImportError:
     import itertools
+    import random
 
     HAVE_HYPOTHESIS = False
 
+    # boundary specials every float range is probed with (when in range):
+    # zero, an f32 subnormal (denormal handling), the f32 max (overflow
+    # and inf-adjacent rounding)
+    _SPECIALS = (0.0, 1e-40, 3.4028235e38)
+    _MAX_SAMPLES = 6
+
+    def _rng(*key) -> random.Random:
+        # seeded by the strategy's own parameters: deterministic across
+        # runs and machines, but distinct per strategy signature
+        return random.Random("repro-hyp:" + repr(key))
+
     class _Samples:
         def __init__(self, samples):
-            self.samples = list(samples)
+            self.samples = list(samples)[:_MAX_SAMPLES]
 
     class _St:
         @staticmethod
         def floats(min_value, max_value, **_kw):
-            mid = (min_value + max_value) / 2.0
-            return _Samples([min_value, mid, max_value])
+            out = [min_value, max_value]
+            out += [s for s in _SPECIALS
+                    if min_value < s < max_value and s not in out]
+            r = _rng("floats", min_value, max_value)
+            while len(out) < _MAX_SAMPLES:
+                v = min_value + (max_value - min_value) * r.random()
+                if v not in out:
+                    out.append(v)
+            return _Samples(out)
 
         @staticmethod
         def integers(min_value, max_value, **_kw):
-            return _Samples([min_value, (min_value + max_value) // 2, max_value])
+            out = [min_value, max_value] if max_value > min_value \
+                else [min_value]
+            r = _rng("integers", min_value, max_value)
+            span = max_value - min_value
+            for _ in range(4 * _MAX_SAMPLES):
+                if len(out) >= min(_MAX_SAMPLES, span + 1):
+                    break
+                v = min_value + r.randrange(span + 1)
+                if v not in out:
+                    out.append(v)
+            return _Samples(out)
 
         @staticmethod
         def sampled_from(seq):

@@ -102,7 +102,8 @@ def test_method_platform_modules_expose_documented_api():
     for sym in ("class ServableMethod", "def pre_process",
                 "def post_process", "def warmup_spec", "batch_buckets",
                 "class SweepLauncher", "class Int8CRLauncher",
-                "class KVGateMethod"):
+                "class KVGateMethod", "class QualityLauncher",
+                "class QualityMethod", "class FindSettingMethod"):
         assert sym in method, f"method.py lost {sym}"
     registry = _read("src", "repro", "serve", "registry.py")
     for sym in ("def default_registry", "def register",
@@ -110,7 +111,8 @@ def test_method_platform_modules_expose_documented_api():
         assert sym in registry, f"registry.py lost {sym}"
     from repro.serve.registry import default_registry
     assert default_registry().names() == (
-        "featurize", "find_eb", "best_compressor", "kv_gate", "advise")
+        "featurize", "find_eb", "best_compressor", "kv_gate", "advise",
+        "find_setting", "quality")
 
 
 def test_streaming_doc_references_real_code():
@@ -138,6 +140,35 @@ def test_streaming_doc_references_real_code():
     assert hasattr(SweepService, "submit_advise")
     assert hasattr(SweepService, "advise")
     assert "docs/streaming.md" in _read("README.md")
+
+
+def test_quality_doc_references_real_code():
+    """docs/quality.md must keep teaching the symbols the quality layer
+    actually exports, and the README must link it."""
+    doc = _read("docs", "quality.md")
+    for sym in ("quality_sweep", "features_sweep", "quality=True",
+                "find_setting", "QualityTable", "JointSetting",
+                "submit_quality", "submit_find_setting", "--psnr-floor",
+                "det_log10", "DEFAULT_TILE", "PSNR_CAP",
+                "BENCH_quality.json"):
+        assert sym in doc, f"quality.md lost {sym}"
+    # the doc's vocabulary must exist in code
+    from repro.core import predictors as P
+    from repro.core import usecases as UC
+    from repro.kernels import quality as Q
+    for mod, names in ((P, ("quality_sweep", "features_sweep")),
+                       (UC, ("find_setting", "QualityTable",
+                             "JointSetting")),
+                       (Q, ("quality_sweep", "DEFAULT_TILE", "PSNR_CAP",
+                            "NRMSE_CAP"))):
+        for name in names:
+            assert hasattr(mod, name), f"{mod.__name__} lost {name}"
+    from repro.serve.sweep_service import SweepService
+    for name in ("submit_quality", "submit_find_setting", "quality",
+                 "find_setting"):
+        assert hasattr(SweepService, name)
+    assert "docs/quality.md" in _read("README.md")
+    assert "psnr-floor" in _read("src", "repro", "launch", "advise.py")
 
 
 def test_performance_doc_references_real_code():

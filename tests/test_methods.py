@@ -85,18 +85,22 @@ def test_unsorted_batch_buckets_rejected():
 def test_default_registry_shape():
     reg = default_registry()
     assert reg.names() == ("featurize", "find_eb", "best_compressor",
-                           "kv_gate", "advise")
-    # the paper methods (and the advisor riding their sweeps) share ONE
-    # launcher instance (that identity is what makes them coalesce into
-    # the same launches)
+                           "kv_gate", "advise", "find_setting", "quality")
+    # the paper methods (and the advisor/UC3 riding their sweeps) share
+    # ONE launcher instance (that identity is what makes them coalesce
+    # into the same launches)
     sweep = reg.get("featurize").launcher
     assert reg.get("find_eb").launcher is sweep
     assert reg.get("best_compressor").launcher is sweep
     assert reg.get("advise").launcher is sweep
+    assert reg.get("find_setting").launcher is sweep
     assert reg.get("kv_gate").launcher is not sweep
-    # launcher wire ids are assigned in registration order
+    assert reg.get("quality").launcher is not sweep
+    # launcher wire ids are assigned in registration order (append-only:
+    # sweep=0, int8cr=1, quality=2 is the wire contract)
     assert reg.launcher_id(sweep) == 0
     assert reg.launcher_id(reg.get("kv_gate").launcher) == 1
+    assert reg.launcher_id(reg.get("quality").launcher) == 2
     assert reg.launcher(0) is sweep
     assert "featurize" in reg and "nope" not in reg
 
@@ -124,16 +128,20 @@ def test_warmup_covers_all_registered_methods():
     with SweepService(ServiceConfig(max_wait_ms=5.0)) as svc:
         svc.warmup()
         sigs = svc._executables
-        assert {s[1] for s in sigs} == {"sweep", "int8cr"}
+        assert {s[1] for s in sigs} == {"sweep", "int8cr", "quality"}
         sweep_sigs = {s for s in sigs if s[1] == "sweep"}
         gate_sigs = {s for s in sigs if s[1] == "int8cr"}
-        # default spec: (32, 32) x 1 eps x buckets {1, 2}; the three
-        # sweep methods share it, so exactly 2 sweep executables compile
+        qual_sigs = {s for s in sigs if s[1] == "quality"}
+        # default spec: (32, 32) x 1 eps x buckets {1, 2}; the sweep
+        # methods (featurize/UC1/UC2/advise/find_setting) share it, so
+        # exactly 2 sweep executables compile
         assert {(s[2], s[3]) for s in sweep_sigs} == \
             {(1, (32, 32)), (2, (32, 32))}
         assert {(s[2], s[3]) for s in gate_sigs} == \
             {(1, (256,)), (2, (256,))}
-        assert len(sigs) == 4
+        assert {(s[2], s[3]) for s in qual_sigs} == \
+            {(1, (32, 32)), (2, (32, 32))}
+        assert len(sigs) == 6
         assert svc.launches == 0     # warmup launches aren't traffic
         # warmed buckets serve real traffic without new executables
         before = len(svc._executables)

@@ -1,0 +1,125 @@
+"""Property-based / metamorphic suite for the sweep stack.
+
+Every numerical claim the serving and streaming layers rest on is an
+invariance: rows are independent (so permuting or padding them moves
+bits around but never changes them), eps columns are independent (so
+coalesced eps unions can reorder freely), truncation features are
+relative quantities (scale-free), and coarser quantization can only
+destroy information (entropy monotonicity).  This file states each one
+as a property over ``tests/_hyp.py`` strategies -- real hypothesis when
+installed, the deterministic seeded fallback grid otherwise.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import predictors as P
+from repro.dist import sweep as DS
+
+_EPSS = np.asarray([3e-3, 1e-2, 1e-1], np.float32)
+
+
+def _stack(seed: int, k: int, m: int = 16, n: int = 24) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(k, m, n)).astype(np.float32)
+
+
+def _bits(a) -> np.ndarray:
+    return np.asarray(a, np.float32).view(np.uint32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10),
+       st.sampled_from([2, 3, 5]))
+def test_slice_permutation_equivariance(seed, k):
+    """Rows of ``features_sweep`` are row-independent: permuting the
+    slice axis permutes the rows BITWISE, nothing else moves.  (The
+    serving layer's coalescing contract: a slice's row cannot depend on
+    its batch neighbours.)"""
+    x = _stack(seed, k)
+    perm = np.random.default_rng(seed + 1).permutation(k)
+    base = np.asarray(P.features_sweep(x, _EPSS))
+    permuted = np.asarray(P.features_sweep(x[perm], _EPSS))
+    assert np.array_equal(_bits(permuted), _bits(base[perm]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10),
+       st.sampled_from([2, 4]))
+def test_eps_permutation_equivariance(seed, k):
+    """Columns of the (k, e, 2) quality tensor are eps-independent:
+    permuting the eb grid permutes the columns BITWISE.  (What lets the
+    service launch sorted eps unions and scatter rows back per key.)"""
+    x = _stack(seed, k)
+    perm = np.random.default_rng(seed + 2).permutation(len(_EPSS))
+    base = np.asarray(P.quality_sweep(x, _EPSS))
+    permuted = np.asarray(P.quality_sweep(x, _EPSS[perm]))
+    assert np.array_equal(_bits(permuted), _bits(base[:, perm]))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=8),
+       st.sampled_from([1, 3, 5]),
+       st.sampled_from(["features", "quality"]))
+def test_pad_row_invariance(seed, pad, mode):
+    """``sweep_padded`` pad rows never change the real rows: launching
+    at any ``k_pad > k`` returns the unpadded result bit-for-bit in the
+    first k rows (the fixed-bucket streaming/serving launch shape)."""
+    k = 3
+    x = _stack(seed, k)
+    fn = P.features_sweep if mode == "features" else P.quality_sweep
+    base = np.asarray(fn(x, _EPSS))
+    padded = np.asarray(DS.gather_rows(DS.sweep_padded(
+        x, _EPSS, P.PredictorConfig(), k_pad=k + pad, mode=mode)))
+    assert padded.shape[0] == k + pad
+    assert np.array_equal(_bits(padded[:k]), _bits(base))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=6),
+       st.floats(min_value=1e-3, max_value=1e3))
+def test_variance_fraction_scale_invariance(seed, scale):
+    """The truncation criterion ``variance_fraction_for`` configures is
+    RELATIVE: it depends only on the stack rank (never the data), and
+    the log trunc-ratio feature it produces is invariant under positive
+    scaling of the data (both the kept singular mass and sigma scale
+    together)."""
+    scale = float(np.float32(scale)) or 1e-3     # fallback grid has 0.0
+    cfg = P.PredictorConfig()
+    x = _stack(seed, 3)
+    for arr in (x, scale * x):
+        assert P.variance_fraction_for(cfg, arr.ndim) == \
+            cfg.variance_fraction_2d
+    assert P.variance_fraction_for(cfg, 4) == cfg.variance_fraction_3d
+    # the fraction-of-singular-mass criterion is a ratio, so the
+    # truncation it selects cannot move with the data's units
+    for s in range(x.shape[0]):
+        t0 = float(P.svd_trunc(x[s]))
+        t1 = float(P.svd_trunc(np.float32(scale) * x[s]))
+        assert t1 == pytest.approx(t0, abs=1.0 / x.shape[2] + 1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10),
+       st.sampled_from([1e-3, 4e-3, 1.5e-2]))
+def test_qent_monotone_vs_sort_oracle(seed, eps0):
+    """Quantized entropy against the exact sort-route oracle, plus the
+    data-processing inequality: doubling eps merges code cells
+    (floor(x / 2eps) == floor(floor(x / eps) / 2)), so entropy is
+    nonincreasing along eps doublings.  Data is kept inside the first
+    ``bins`` codes so the histogram's mod-bins fold is injective and
+    the binned entropy IS the exact entropy."""
+    from repro.kernels.qent.ref import quantized_entropy_sweep
+
+    x = np.clip(_stack(seed, 2), -1.0, 1.0)
+    epss = np.asarray([eps0, 2 * eps0, 4 * eps0], np.float32)
+    ent = np.asarray(quantized_entropy_sweep(x, epss))     # (k, e)
+    for s in range(x.shape[0]):
+        flat = x[s].reshape(-1)
+        for ei, eps in enumerate(epss):
+            codes = np.floor(flat / np.float32(eps)).astype(np.int64)
+            _, counts = np.unique(codes, return_counts=True)
+            p = counts.astype(np.float64) / counts.sum()
+            oracle = float(-(p * np.log2(p)).sum())
+            assert ent[s, ei] == pytest.approx(oracle, abs=1e-4)
+        assert ent[s, 0] + 1e-5 >= ent[s, 1] >= ent[s, 2] - 1e-5

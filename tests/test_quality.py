@@ -1,0 +1,304 @@
+"""f64 numpy oracle + route-equality tests for the fused quality sweep.
+
+The quality tensor's contract has two halves:
+
+* ACCURACY -- the f32 one-pass SSE/PSNR/NRMSE pipeline must track an
+  f64 numpy oracle that shares only the quantizer's f32 code decisions
+  (so boundary ties can't flip a code between the two), and every edge
+  the formulas can hit (constant slices, all-zero slices, eps far above
+  the value range) must come out finite and correctly capped;
+* BIT-EQUALITY -- the jnp reference route, the Pallas-interpret kernel
+  route, the sharded launch, the streamed driver, and the served method
+  must all emit the identical bits (the serving/streaming layers'
+  coalescing contract, same as the feature sweep's).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import predictors as P
+from repro.core import stream as ST
+from repro.core import usecases as UC
+from repro.data import source as SRC
+from repro.dist import sweep as DS
+from repro.kernels.quality import NRMSE_CAP, PSNR_CAP, quality_sweep
+from repro.quant import INT32_CODE_MAX, INT32_CODE_MIN
+
+_EPSS = np.asarray([1e-3, 1e-2, 1e-1], np.float32)
+
+
+def _stack(seed=0, k=4, m=24, n=32):
+    return np.random.default_rng(seed).normal(
+        size=(k, m, n)).astype(np.float32)
+
+
+def _bits(a):
+    return np.asarray(a, np.float32).view(np.uint32)
+
+
+def oracle_quality(x: np.ndarray, epss) -> np.ndarray:
+    """f64 numpy oracle: f32 code decisions (matching the quantizer
+    exactly), f64 error accumulation and finalization."""
+    x = np.asarray(x, np.float32)
+    k = x.shape[0]
+    flat = x.reshape(k, -1).astype(np.float64)
+    flat32 = x.reshape(k, -1)
+    rng = np.abs(flat.max(axis=1) - flat.min(axis=1))
+    out = np.empty((k, len(epss), 2), np.float64)
+    for ei, eps in enumerate(np.asarray(epss, np.float32)):
+        codes = np.clip(np.floor(flat32 / eps), INT32_CODE_MIN,
+                        INT32_CODE_MAX).astype(np.int64)
+        err = flat - codes * np.float64(eps)
+        mse = np.mean(err * err, axis=1)
+        exact = mse == 0.0
+        with np.errstate(divide="ignore", invalid="ignore"):
+            psnr = np.where(
+                exact, PSNR_CAP,
+                np.clip(20.0 * np.log10(rng) - 10.0 * np.log10(mse),
+                        -PSNR_CAP, PSNR_CAP))
+            nrmse = np.where(exact, 0.0,
+                             np.clip(np.sqrt(mse) / rng, 0.0, NRMSE_CAP))
+        out[:, ei, 0] = np.nan_to_num(psnr, nan=-PSNR_CAP,
+                                      posinf=PSNR_CAP, neginf=-PSNR_CAP)
+        out[:, ei, 1] = np.nan_to_num(nrmse, nan=NRMSE_CAP,
+                                      posinf=NRMSE_CAP)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Accuracy vs the f64 oracle
+# ---------------------------------------------------------------------------
+
+
+def test_quality_matches_f64_oracle():
+    """Random data, both kernel routes: PSNR within 1e-3 dB and NRMSE
+    within 1e-5 relative of the f64 oracle."""
+    x = _stack(0)
+    want = oracle_quality(x, _EPSS)
+    for use_kernel in (False, True):
+        got = np.asarray(quality_sweep(x, _EPSS, use_kernel=use_kernel))
+        np.testing.assert_allclose(got[:, :, 0], want[:, :, 0], atol=1e-3)
+        np.testing.assert_allclose(got[:, :, 1], want[:, :, 1],
+                                   rtol=1e-5, atol=1e-12)
+
+
+def test_quality_volume_rank4():
+    """(k, d, m, n) volumes flatten identically to slices: the oracle
+    sees the same flat stream."""
+    x = np.random.default_rng(1).normal(size=(3, 4, 16, 16)) \
+        .astype(np.float32)
+    want = oracle_quality(x, _EPSS)
+    got = np.asarray(P.quality_sweep(x, _EPSS))
+    np.testing.assert_allclose(got[:, :, 0], want[:, :, 0], atol=1e-3)
+    np.testing.assert_allclose(got[:, :, 1], want[:, :, 1],
+                               rtol=1e-5, atol=1e-12)
+
+
+def test_constant_slice_exact_psnr_cap():
+    """A constant slice exactly representable at eps (c = m * eps) has
+    SSE == 0: PSNR reports the +cap, not NaN/inf, and NRMSE is 0."""
+    eps = np.float32(0.25)
+    x = np.full((2, 8, 16), 16 * 0.25, np.float32)    # codes land exactly
+    out = np.asarray(quality_sweep(x, np.asarray([eps])))
+    assert np.all(np.isfinite(out))
+    assert np.all(out[:, :, 0] == PSNR_CAP)
+    assert np.all(out[:, :, 1] == 0.0)
+
+
+def test_constant_slice_inexact_hits_negative_cap():
+    """A constant slice with NONZERO quantization error has zero range:
+    log10(0) would be -inf, the clip floors PSNR at the -cap and NRMSE
+    saturates at its cap -- everything stays finite."""
+    x = np.full((2, 8, 16), 0.3, np.float32)          # 0.3/0.25 -> err != 0
+    out = np.asarray(quality_sweep(x, np.asarray([0.25], np.float32)))
+    assert np.all(np.isfinite(out))
+    assert np.all(out[:, :, 0] == -PSNR_CAP)
+    assert np.all(out[:, :, 1] == NRMSE_CAP)
+
+
+def test_all_zero_slice():
+    """All-zero slices quantize exactly at every eps: +cap PSNR, 0
+    NRMSE, on both routes."""
+    x = np.zeros((3, 16, 16), np.float32)
+    for use_kernel in (False, True):
+        out = np.asarray(quality_sweep(x, _EPSS, use_kernel=use_kernel))
+        assert np.all(out[:, :, 0] == PSNR_CAP)
+        assert np.all(out[:, :, 1] == 0.0)
+
+
+def test_eps_larger_than_value_range():
+    """eps far above the value range collapses every positive value to
+    code 0 (error = x) and negatives to code -1: finite outputs matching
+    the oracle, never NaN."""
+    x = _stack(2, k=3) * 0.01                          # range ~ +-0.04
+    epss = np.asarray([1.0, 100.0], np.float32)
+    want = oracle_quality(x, epss)
+    out = np.asarray(quality_sweep(x, epss))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out[:, :, 0], want[:, :, 0], atol=1e-3)
+    np.testing.assert_allclose(out[:, :, 1], want[:, :, 1],
+                               rtol=1e-5, atol=1e-12)
+
+
+def test_mixed_edge_stack():
+    """One launch mixing random, all-zero, constant-exact and tiny-range
+    rows stays finite and bit-equal between the two kernel routes (rows
+    are independent: edge rows cannot leak into their neighbours)."""
+    rows = [np.random.default_rng(3).normal(size=(8, 16)),
+            np.zeros((8, 16)), np.full((8, 16), 0.5),
+            1e-30 * np.random.default_rng(4).normal(size=(8, 16))]
+    x = np.stack(rows).astype(np.float32)
+    a = np.asarray(quality_sweep(x, _EPSS, use_kernel=False))
+    b = np.asarray(quality_sweep(x, _EPSS, use_kernel=True))
+    assert np.all(np.isfinite(a))
+    assert np.array_equal(_bits(a), _bits(b))
+
+
+# ---------------------------------------------------------------------------
+# Route bit-equality
+# ---------------------------------------------------------------------------
+
+
+def test_jnp_vs_pallas_interpret_bitequal():
+    x = _stack(5)
+    a = np.asarray(quality_sweep(x, _EPSS, use_kernel=False))
+    b = np.asarray(quality_sweep(x, _EPSS, use_kernel=True))
+    assert np.array_equal(_bits(a), _bits(b))
+
+
+def test_engine_and_both_mode_bitequal():
+    """``features_sweep(quality=True)`` splits one fused "both" launch;
+    each half must be bit-equal to its standalone sweep."""
+    x = _stack(6)
+    feats, qual = P.features_sweep(x, _EPSS, quality=True)
+    assert np.array_equal(_bits(feats),
+                          _bits(P.features_sweep(x, _EPSS)))
+    assert np.array_equal(_bits(qual), _bits(P.quality_sweep(x, _EPSS)))
+    eng = P.get_engine(P.PredictorConfig())
+    assert np.array_equal(_bits(eng.quality(x, _EPSS)), _bits(qual))
+
+
+def test_sharded_bitequal():
+    """Sharded launch (all local devices) == single-device bits."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >1 device (run under the multi-device job)")
+    from repro.launch import mesh as M
+    x = _stack(7, k=8)
+    base = np.asarray(P.quality_sweep(x, _EPSS))
+    mesh = M.make_sweep_mesh(len(jax.devices()))
+    out = np.asarray(P.quality_sweep(x, _EPSS, mesh=mesh))
+    assert np.array_equal(_bits(out), _bits(base))
+
+
+def test_streamed_bitequal(tmp_path):
+    """Chunked streaming (tiny budget -> many chunks) == in-memory."""
+    gen = SRC.GeneratorSource(
+        [SRC.FieldVariable("miranda-vx", 7, (32,), seed=2)])
+    path = SRC.write_dataset(str(tmp_path / "ds"), gen, fmt="npz",
+                             dtype="float64")
+    src = SRC.open_dataset(path)
+    x = src.read("miranda-vx")
+    feats, qual = ST.stream_features(
+        src, "miranda-vx", _EPSS, quality=True,
+        stream=ST.StreamConfig(budget_bytes=2 * 32 * 32 * 4))
+    assert np.array_equal(_bits(feats),
+                          _bits(P.features_sweep(x, _EPSS)))
+    assert np.array_equal(_bits(qual), _bits(P.quality_sweep(x, _EPSS)))
+
+
+def test_served_bitequal():
+    """The registered ``quality`` method == the direct sweep, bits."""
+    from repro.serve.sweep_service import ServiceConfig, SweepService
+    x = _stack(8)
+    base = np.asarray(P.quality_sweep(x, _EPSS))
+    with SweepService(ServiceConfig(max_wait_ms=20.0)) as svc:
+        out = svc.quality(x, _EPSS)
+        # distinct key space: the same slices' FEATURE rows must not
+        # collide with the quality rows in the cross-request cache
+        feats = svc.featurize(x, _EPSS)
+    assert np.array_equal(_bits(out), _bits(base))
+    assert np.array_equal(_bits(feats),
+                          _bits(P.features_sweep(x, _EPSS)))
+
+
+def test_quality_sweep_validation():
+    with pytest.raises(ValueError):
+        quality_sweep(_stack(), np.asarray([0.0], np.float32))
+    with pytest.raises(ValueError):
+        quality_sweep(_stack(), _EPSS, tile=100)       # not 8 * 2^j
+    with pytest.raises(ValueError):
+        P.quality_sweep(np.zeros((4, 4), np.float32), _EPSS)  # rank 2
+
+
+# ---------------------------------------------------------------------------
+# UC3: quality tables + joint frontier search
+# ---------------------------------------------------------------------------
+
+
+def _models(seed=9, names=("zfp", "sz2")):
+    ebs = [1e-4, 1e-3, 1e-2, 1e-1]
+    train = _stack(seed, k=6)
+    return {n: UC.EbGridModel.train(train, n, ebs) for n in names}
+
+
+def test_quality_table_trained_and_predicts():
+    models = _models()
+    x = _stack(10, k=1)[0]
+    for gm in models.values():
+        assert gm.quality is not None
+        assert gm.quality.coef.shape == (4, 3)
+        # finer eb -> (weakly) better predicted quality on average data
+        p_fine = gm.predict_psnr(x, 1e-4)
+        p_coarse = gm.predict_psnr(x, 1e-1)
+        assert np.isfinite(p_fine) and np.isfinite(p_coarse)
+        assert -PSNR_CAP <= p_coarse <= p_fine + 40.0 <= PSNR_CAP + 40.0
+
+
+def test_find_setting_feasible_is_grid_complete():
+    """Whenever some grid point meets both (monotonized) floors,
+    find_setting returns a feasible setting -- checked against a brute
+    force over the grid."""
+    models = _models()
+    x = _stack(11, k=1)[0]
+    gm = next(iter(models.values()))
+    for psnr_floor in (40.0, 60.0, 90.0):
+        # brute-force joint feasibility over the grid
+        feas_cr = []
+        for name, m in models.items():
+            pg = np.minimum.accumulate(
+                [m.predict_psnr(x, float(e)) for e in m.ebs])
+            cg = np.maximum.accumulate(
+                [m.predict(x, float(e)) for e in m.ebs])
+            feas_cr += [c for p, c in zip(pg, cg) if p >= psnr_floor]
+        if not feas_cr:
+            continue
+        cr_floor = 0.9 * max(feas_cr)
+        res = UC.find_setting(models, x, cr_floor=cr_floor,
+                              psnr_floor=psnr_floor)
+        assert res.feasible, (psnr_floor, cr_floor, res)
+        assert res.predicted_cr >= cr_floor
+        assert res.predicted_psnr >= psnr_floor - 1e-6
+        assert res.compressor in models
+
+
+def test_find_setting_infeasible_is_typed():
+    models = _models()
+    x = _stack(12, k=1)[0]
+    res = UC.find_setting(models, x, cr_floor=1e9, psnr_floor=40.0)
+    assert not res.feasible and "CR >= 1e+09" in res.reason
+    assert set(res.candidates) == set(models)
+    res = UC.find_setting(models, x, cr_floor=1.0, psnr_floor=1e4)
+    assert not res.feasible and "unreachable" in res.reason
+
+
+def test_find_setting_requires_quality_tables():
+    models = _models()
+    import dataclasses
+    broken = dict(models)
+    first = next(iter(broken))
+    broken[first] = dataclasses.replace(broken[first], quality=None)
+    with pytest.raises(ValueError, match="quality table"):
+        UC.find_setting(broken, _stack(13, k=1)[0],
+                        cr_floor=2.0, psnr_floor=50.0)
